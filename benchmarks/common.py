@@ -1,0 +1,59 @@
+"""Shared benchmark utilities: datasets, timing, CSV rows."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+
+
+def dataset(name: str, n: int, key=None):
+    """(x, labels) — synthetic stand-ins shaped like the paper's corpora
+    (clustered, high-dim; offline container has no MNIST/Wiki downloads)."""
+    from repro.data.synthetic import gaussian_mixture, mnist_like, swiss_roll
+    key = jax.random.key(0) if key is None else key
+    if name == "blobs100":          # WikiDoc-like: 100-dim clustered
+        return gaussian_mixture(key, n, 100, 20, sep=7.0)
+    if name == "mnist_like":        # MNIST-like: 784-dim, 10 classes
+        return mnist_like(key, n, 784, 10)
+    if name == "manifold":          # Isomap-style curved manifold
+        return swiss_roll(key, n, 32)
+    raise KeyError(name)
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    """(result, best_seconds) with jax block_until_ready."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.time()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, time.time() - t0)
+    return out, best
+
+
+class Rows:
+    """Collect 'name,us_per_call,derived' CSV rows (run.py contract)."""
+
+    def __init__(self, table: str):
+        self.table = table
+        self.rows = []
+
+    def add(self, name: str, seconds: float, **derived):
+        self.rows.append((f"{self.table}/{name}", seconds * 1e6, derived))
+
+    def print_csv(self):
+        for name, us, derived in self.rows:
+            d = json.dumps(derived, sort_keys=True) if derived else ""
+            print(f"{name},{us:.1f},{d}")
+
+    def save(self):
+        ART.mkdir(parents=True, exist_ok=True)
+        path = ART / f"{self.table}.json"
+        path.write_text(json.dumps(
+            [dict(name=n, us=u, **d) for n, u, d in self.rows], indent=1))
+        return path

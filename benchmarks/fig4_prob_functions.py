@@ -1,0 +1,40 @@
+"""Paper Fig 4: probability functions f for P(e_ij=1) = f(||yi-yj||).
+
+Compares f(x) = 1/(1+a x^2) for a in {1, 4, 9} and f(x) = 1/(1+exp(x^2))
+by downstream KNN-classifier accuracy.  Claim C3: a=1 (long-tailed,
+t-SNE's Student-t argument) wins."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Rows, dataset, timed
+from repro.configs.largevis_default import LargeVisConfig
+from repro.core.largevis import build_graph, layout_graph
+from repro.core.metrics import knn_classifier_accuracy
+
+N = 4000
+KEY = jax.random.key(2)
+
+
+def run(rows: Rows):
+    x, labels = dataset("blobs100", N, KEY)
+    base = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=2,
+                          window=32, perplexity=12.0, samples_per_node=3000,
+                          batch_size=4096)
+    idx, dist, w, _ = build_graph(x, KEY, base)
+    variants = [("inv_quadratic", 1.0), ("inv_quadratic", 4.0),
+                ("inv_quadratic", 9.0), ("exp_quadratic", 1.0)]
+    import dataclasses
+    for fn, a in variants:
+        cfg = dataclasses.replace(base, prob_fn=fn, prob_a=a)
+        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg)
+        acc = knn_classifier_accuracy(res.y, labels, k=5)
+        label = f"{fn}_a{a:g}" if fn == "inv_quadratic" else fn
+        rows.add(label, secs, accuracy=round(acc, 4))
+
+
+if __name__ == "__main__":
+    rows = Rows("fig4_prob_functions")
+    run(rows)
+    rows.print_csv()
+    rows.save()

@@ -1,0 +1,60 @@
+"""Paper Fig 5: layout quality (2D KNN-classifier accuracy) across methods.
+
+LargeVis (default params) vs t-SNE (default + tuned lr) vs symmetric SNE vs
+LINE-2D, all consuming the SAME LargeVis-built KNN graph (paper §4.3).
+Claims C4: LargeVis >= t-SNE-tuned with defaults; LINE is a poor visualizer.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Rows, dataset, timed
+from repro.configs.largevis_default import LargeVisConfig
+from repro.core import sampler as S
+from repro.core.baselines.line import line_layout
+from repro.core.baselines.tsne import tsne_layout
+from repro.core.largevis import build_graph, layout_graph
+from repro.core.metrics import knn_classifier_accuracy
+
+N = 2500          # exact O(N^2) t-SNE bounds the size
+KEY = jax.random.key(3)
+
+
+def run(rows: Rows):
+    for ds in ("blobs100", "mnist_like"):
+        x, labels = dataset(ds, N, KEY)
+        cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=2,
+                             window=32, perplexity=12.0,
+                             samples_per_node=4000, batch_size=4096)
+        idx, dist, w, _ = build_graph(x, KEY, cfg)
+
+        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg)
+        acc = knn_classifier_accuracy(res.y, labels, k=5)
+        rows.add(f"{ds}/largevis_default", secs, accuracy=round(acc, 4))
+
+        for lr, tag in ((200.0, "default_lr"), (1000.0, "tuned_lr")):
+            (y, _), secs = timed(tsne_layout, idx, w, n_iter=300, lr=lr,
+                                 key=KEY)
+            acc = knn_classifier_accuracy(y, labels, k=5)
+            rows.add(f"{ds}/tsne_{tag}", secs, accuracy=round(acc, 4))
+
+        # SNE's Gaussian kernel needs a much smaller lr than t-SNE's
+        # Student-t (gradients lack the heavy-tail damping factor)
+        (y, _), secs = timed(tsne_layout, idx, w, n_iter=300, lr=20.0,
+                             student_t=False, key=KEY)
+        acc = knn_classifier_accuracy(y, labels, k=5)
+        rows.add(f"{ds}/symmetric_sne", secs, accuracy=round(acc, 4))
+
+        es = S.build_edge_sampler(idx, w)
+        ns = S.build_negative_sampler(idx, w)
+        y, secs = timed(line_layout, KEY, es, ns, x.shape[0],
+                        samples_per_node=4000)
+        acc = knn_classifier_accuracy(y, labels, k=5)
+        rows.add(f"{ds}/line_2d", secs, accuracy=round(acc, 4))
+
+
+if __name__ == "__main__":
+    rows = Rows("fig5_knn_classifier")
+    run(rows)
+    rows.print_csv()
+    rows.save()

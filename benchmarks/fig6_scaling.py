@@ -1,0 +1,40 @@
+"""Paper Fig 6: time + quality vs data size.
+
+Claim C5: LargeVis layout cost is O(N) — edge-samples/sec stays flat as N
+grows (T ∝ N total) — while t-SNE's per-iteration cost grows superlinearly
+(O(N log N) Barnes-Hut; O(N^2) exact as here)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Rows, dataset, timed
+from repro.configs.largevis_default import LargeVisConfig
+from repro.core.baselines.tsne import tsne_layout
+from repro.core.largevis import build_graph, layout_graph
+from repro.core.metrics import knn_classifier_accuracy
+
+KEY = jax.random.key(5)
+
+
+def run(rows: Rows):
+    for n in (1000, 2000, 4000, 8000):
+        x, labels = dataset("blobs100", n, KEY)
+        cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=1,
+                             window=32, perplexity=12.0,
+                             samples_per_node=2000, batch_size=4096)
+        idx, dist, w, _ = build_graph(x, KEY, cfg)
+        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg)
+        acc = knn_classifier_accuracy(res.y, labels, k=5)
+        rows.add(f"largevis_n{n}", secs, accuracy=round(acc, 4),
+                 samples_per_sec=round(res.edge_samples / max(secs, 1e-9)))
+        if n <= 4000:      # exact t-SNE O(N^2) budget
+            (y, _), secs_t = timed(tsne_layout, idx, w, n_iter=100, key=KEY)
+            rows.add(f"tsne_n{n}", secs_t,
+                     sec_per_iter=round(secs_t / 100, 5))
+
+
+if __name__ == "__main__":
+    rows = Rows("fig6_scaling")
+    run(rows)
+    rows.print_csv()
+    rows.save()

@@ -1,0 +1,43 @@
+"""Paper Fig 7: sensitivity to the number of negatives (M) and the total
+edge-sample budget (T).  Claim C4b: quality is stable once M >= 5 and T is
+large enough — the 'defaults work everywhere' property."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import Rows, dataset, timed
+from repro.configs.largevis_default import LargeVisConfig
+from repro.core.largevis import build_graph, layout_graph
+from repro.core.metrics import knn_classifier_accuracy
+
+N = 4000
+KEY = jax.random.key(6)
+
+
+def run(rows: Rows):
+    x, labels = dataset("blobs100", N, KEY)
+    base = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=2,
+                          window=32, perplexity=12.0, samples_per_node=3000,
+                          batch_size=4096)
+    idx, dist, w, _ = build_graph(x, KEY, base)
+
+    for m in (1, 3, 5, 7):
+        cfg = dataclasses.replace(base, n_negatives=m)
+        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg)
+        acc = knn_classifier_accuracy(res.y, labels, k=5)
+        rows.add(f"negatives_m{m}", secs, accuracy=round(acc, 4))
+
+    for spn in (500, 1500, 3000, 6000):
+        cfg = dataclasses.replace(base, samples_per_node=spn)
+        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg)
+        acc = knn_classifier_accuracy(res.y, labels, k=5)
+        rows.add(f"samples_t{spn}", secs, accuracy=round(acc, 4))
+
+
+if __name__ == "__main__":
+    rows = Rows("fig7_sensitivity")
+    run(rows)
+    rows.print_csv()
+    rows.save()

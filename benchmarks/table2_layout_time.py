@@ -1,0 +1,40 @@
+"""Paper Table 2: graph-visualization wall time, LargeVis vs t-SNE.
+
+At container scale the comparison is per-(edge-sample|gradient-iteration)
+throughput plus total wall time on equal sample budgets; the paper's
+headline (LargeVis ~7x faster at millions of nodes) comes from O(N) vs
+O(N log N) — fig6 measures the scaling directly."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Rows, dataset, timed
+from repro.configs.largevis_default import LargeVisConfig
+from repro.core.baselines.tsne import tsne_layout
+from repro.core.largevis import build_graph, layout_graph
+
+KEY = jax.random.key(4)
+
+
+def run(rows: Rows):
+    for n in (1500, 3000):
+        x, _ = dataset("blobs100", n, KEY)
+        cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=1,
+                             window=32, perplexity=12.0,
+                             samples_per_node=3000, batch_size=4096)
+        idx, dist, w, _ = build_graph(x, KEY, cfg)
+        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg)
+        rows.add(f"largevis_n{n}", secs,
+                 edge_samples=res.edge_samples,
+                 samples_per_sec=round(res.edge_samples / max(secs, 1e-9)))
+        (y, _), secs_t = timed(tsne_layout, idx, w, n_iter=250, key=KEY)
+        rows.add(f"tsne_n{n}", secs_t, iters=250,
+                 sec_per_iter=round(secs_t / 250, 5),
+                 speedup_largevis=round(secs_t / max(secs, 1e-9), 2))
+
+
+if __name__ == "__main__":
+    rows = Rows("table2_layout_time")
+    run(rows)
+    rows.print_csv()
+    rows.save()

@@ -1,0 +1,47 @@
+"""Serve a small model with batched requests (continuous batching engine).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x7b]
+
+Uses reduced configs on CPU; the same ServeEngine runs full configs on a
+pod via make_production_mesh() + the decode-cell shardings proven by the
+dry-run.
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    eng = ServeEngine(cfg, slots=4, max_len=96, temperature=0.8)
+    rng = np.random.default_rng(1)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                    int(rng.integers(4, 16))).tolist(),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    t0 = time.time()
+    for r in reqs:
+        eng.submit(r)
+    steps = eng.run()
+    dt = time.time() - t0
+    total = sum(len(r.out) for r in reqs)
+    print(f"{args.arch}: served {len(reqs)} requests / {total} tokens in "
+          f"{steps} engine steps, {dt:.1f}s ({total/dt:.1f} tok/s; "
+          f"4-slot continuous batching)")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: {len(r.prompt)}-token prompt -> "
+              f"{len(r.out)} generated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Ties the two halves of the framework together: train a small LM, then
+visualize its learned token embeddings with LargeVis — the paper's own
+recommended usage ('use Skipgram/LINE to learn 100-dim representations,
+then LargeVis to visualize them', §4.1).
+
+    PYTHONPATH=src python examples/visualize_embeddings.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.largevis_default import LargeVisConfig
+from repro.core.largevis import largevis
+from repro.launch.train import train
+
+
+def main():
+    # 1) train a reduced qwen for a few hundred steps on structured data
+    print("training reduced qwen1.5 (few hundred steps)...")
+    params, _, losses = train("qwen1.5-0.5b", steps=200, batch=8, seq=64,
+                              ckpt_dir="/tmp/emb_ckpt", resume=False,
+                              log_every=50)
+    first, last = losses[0][1], losses[-1][1]
+    print(f"loss {first:.3f} -> {last:.3f}")
+
+    # 2) extract the token embedding table (vocab x d)
+    table = np.asarray(params["embed"]["table"], np.float32)
+    print(f"embedding table: {table.shape}")
+
+    # 3) LargeVis the embeddings into 2D
+    cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=2,
+                         window=32, perplexity=10.0, samples_per_node=2000,
+                         batch_size=4096)
+    result = largevis(jnp.asarray(table), jax.random.key(1), cfg)
+    y = np.asarray(result.y)
+    print(f"layout: {y.shape}, spread {y.std():.2f}")
+    np.savez("/tmp/largevis_token_embeddings.npz", coords=y)
+    print("wrote /tmp/largevis_token_embeddings.npz")
+
+
+if __name__ == "__main__":
+    main()

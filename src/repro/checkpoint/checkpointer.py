@@ -1,0 +1,127 @@
+"""Sharded, atomic, rotating checkpoints (tensorstore-free: npz shards).
+
+Layout:  <dir>/step_<N>/
+            meta.json              tree structure + shapes + step
+            shard_<i>.npz          flattened leaves (host-gathered)
+            _COMMITTED             written LAST -> crash-safe atomicity
+
+Fault-tolerance contract (tested in tests/test_fault_tolerance.py):
+  * save is atomic: a checkpoint without _COMMITTED is ignored on restore
+    (a process killed mid-save can never corrupt training);
+  * restore() -> bit-identical state -> bit-identical training continuation;
+  * elastic restore: leaves are saved UNSHARDED (host-gathered), so a run
+    checkpointed on P devices restores onto P' devices with any sharding
+    (the loader re-shards with jax.device_put against the new mesh).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir, step: int, tree, *, keep: int = 3,
+         shard_mb: int = 512) -> pathlib.Path:
+    """Write one checkpoint; returns its path."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    tmp = ckpt_dir / f"_tmp_step_{step}_{os.getpid()}"
+    final = ckpt_dir / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = _flatten(tree)
+    # host-gather (works for sharded or replicated arrays)
+    host = [np.asarray(jax.device_get(l)) for l in leaves]
+    meta = {"step": step, "treedef": jax.tree_util.tree_structure(
+        tree).serialize_using_proto().hex(),
+        "n_leaves": len(host), "time": time.time(),
+        "shapes": [list(h.shape) for h in host],
+        "dtypes": [str(h.dtype) for h in host]}
+
+    budget = shard_mb * (1 << 20)
+    shard, size, shard_idx, index = {}, 0, 0, []
+    for i, h in enumerate(host):
+        shard[f"leaf_{i}"] = h
+        size += h.nbytes
+        index.append(shard_idx)
+        if size >= budget:
+            np.savez(tmp / f"shard_{shard_idx}.npz", **shard)
+            shard, size = {}, 0
+            shard_idx += 1
+    if shard:
+        np.savez(tmp / f"shard_{shard_idx}.npz", **shard)
+    meta["leaf_shard"] = index
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    (tmp / "_COMMITTED").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                       # atomic on same filesystem
+    _rotate(ckpt_dir, keep)
+    return final
+
+
+def _rotate(ckpt_dir: pathlib.Path, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s}", ignore_errors=True)
+
+
+def all_steps(ckpt_dir) -> list:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    out = []
+    if not ckpt_dir.exists():
+        return out
+    for p in ckpt_dir.iterdir():
+        if p.name.startswith("step_") and (p / "_COMMITTED").exists():
+            out.append(int(p.name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir, step: Optional[int] = None, *, shardings=None,
+            like=None):
+    """Load a checkpoint.  shardings: optional pytree of NamedShardings to
+    re-shard onto (elastic restore onto a different mesh/device count).
+    like: optional pytree for structure validation."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    path = ckpt_dir / f"step_{step}"
+    assert (path / "_COMMITTED").exists(), f"uncommitted checkpoint {path}"
+    meta = json.loads((path / "meta.json").read_text())
+    td_cls = type(jax.tree_util.tree_structure(0))
+    treedef = td_cls.deserialize_using_proto(
+        jax.tree_util.default_registry, bytes.fromhex(meta["treedef"]))
+    shards = {}
+    leaves = []
+    for i, sh_idx in enumerate(meta["leaf_shard"]):
+        if sh_idx not in shards:
+            shards[sh_idx] = np.load(path / f"shard_{sh_idx}.npz")
+        leaves.append(shards[sh_idx][f"leaf_{i}"])
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if like is not None:
+        jax.tree_util.tree_structure(like)  # raises on mismatch when mapped
+        tree = jax.tree.map(lambda want, got: got.astype(want.dtype), like,
+                            tree)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda arr, s: jax.device_put(arr, s), tree, shardings)
+    return tree, meta["step"]

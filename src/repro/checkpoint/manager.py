@@ -1,0 +1,37 @@
+"""Checkpoint manager: periodic saves, auto-resume, preemption awareness."""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import time
+from typing import Any, Optional
+
+from repro.checkpoint import checkpointer as ckpt
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    save_every: int = 100
+    keep: int = 3
+    _last_save_time: float = dataclasses.field(default=0.0, init=False)
+
+    def maybe_save(self, step: int, tree) -> Optional[pathlib.Path]:
+        if step % self.save_every != 0:
+            return None
+        t0 = time.time()
+        path = ckpt.save(self.directory, step, tree, keep=self.keep)
+        self._last_save_time = time.time() - t0
+        return path
+
+    def save_now(self, step: int, tree) -> pathlib.Path:
+        return ckpt.save(self.directory, step, tree, keep=self.keep)
+
+    def resume(self, *, shardings=None, like=None):
+        """(tree, step) of the latest committed checkpoint, else (None, 0)."""
+        step = ckpt.latest_step(self.directory)
+        if step is None:
+            return None, 0
+        tree, step = ckpt.restore(self.directory, step, shardings=shardings,
+                                  like=like)
+        return tree, step

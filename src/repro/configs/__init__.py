@@ -1,0 +1,42 @@
+"""Config registry: ``get_config("llama3-8b")`` / ``--arch llama3-8b``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    ShapeConfig,
+    SHAPES,
+    cell_applicable,
+    input_specs,
+    kv_cache_specs,
+)
+from repro.configs.largevis_default import LargeVisConfig, DEFAULT as LARGEVIS_DEFAULT  # noqa: F401
+
+_ARCH_MODULES = {
+    "qwen1.5-0.5b": "qwen15_05b",
+    "gemma3-12b": "gemma3_12b",
+    "llama3-8b": "llama3_8b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "whisper-tiny": "whisper_tiny",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "dbrx-132b": "dbrx_132b",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "chameleon-34b": "chameleon_34b",
+    "xlstm-125m": "xlstm_125m",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name.endswith("-reduced"):
+        return get_config(name[: -len("-reduced")]).reduced()
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict:
+    return {name: get_config(name) for name in _ARCH_MODULES}

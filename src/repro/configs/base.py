@@ -1,0 +1,257 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture is an ``ArchConfig`` instance in its own module
+(``src/repro/configs/<id>.py``).  ``ShapeConfig`` describes the four assigned
+input shapes.  ``input_specs`` builds the ShapeDtypeStruct stand-ins consumed
+by the multi-pod dry-run (no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """A single LM-family architecture.
+
+    ``block_pattern`` is one *period* of the layer stack; the full stack is
+    ``block_pattern * (n_layers // len(block_pattern))``.  Homogeneous archs
+    use a length-1 pattern and scan over all layers; heterogeneous archs
+    (gemma3 5:1, jamba 1:7, xlstm m/s) scan over super-blocks with the
+    period unrolled inside the scan body.
+    """
+
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+
+    # --- attention ---
+    attn_bias: bool = False          # qwen1.5: bias on QKV projections
+    qk_norm: bool = False            # chameleon / gemma3
+    rope_theta: float = 10_000.0
+    max_position: int = 1 << 20
+    sliding_window: int = 0          # 0 = full attention (mixtral: 4096)
+    # gemma3-style local:global mix; entries of block_pattern control it.
+
+    # --- mlp ---
+    mlp_type: str = "swiglu"         # swiglu | geglu | gelu
+
+    # --- moe ---
+    n_experts: int = 0
+    topk_experts: int = 0
+    moe_every: int = 1               # jamba: MoE on every 2nd layer
+
+    # --- layer pattern (one period) ---
+    block_pattern: tuple = ("attn",)
+
+    # --- ssm (mamba / xlstm) ---
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+
+    # --- encoder-decoder (whisper) ---
+    is_encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    enc_positions: int = 1500        # whisper: 30s audio -> 1500 frames
+
+    # --- frontend stubs ---
+    frontend: str = "none"           # none | audio_stub | vq_stub
+
+    # --- misc ---
+    embed_scale: bool = False        # gemma: scale embeddings by sqrt(d)
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    # long_500k applicability: sub-quadratic decode path exists?
+    subquadratic: bool = False
+    notes: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % len(self.block_pattern) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"period {len(self.block_pattern)}")
+        return self.n_layers // len(self.block_pattern)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks), for roofline."""
+        hd = self.resolved_head_dim
+        d = self.d_model
+        attn = d * hd * self.n_heads + 2 * d * hd * self.n_kv_heads \
+            + hd * self.n_heads * d
+        if self.mlp_type in ("swiglu", "geglu"):
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        moe_mlp = mlp * self.n_experts + d * self.n_experts
+        mamba_inner = d * self.ssm_expand
+        mamba = (d * mamba_inner * 2            # in_proj (x, z)
+                 + mamba_inner * self.ssm_conv  # conv
+                 + mamba_inner * (self.ssm_state * 2 + 1)  # B,C,dt proj-ish
+                 + mamba_inner * self.ssm_state            # A
+                 + mamba_inner * d)             # out_proj
+        xl = 4 * d * d                          # rough mlstm/slstm block
+        total = 0
+        for li in range(self.n_layers):
+            kind = self.block_pattern[li % len(self.block_pattern)]
+            use_moe = (self.n_experts > 0 and li % self.moe_every ==
+                       (self.moe_every - 1) and kind != "mamba_dense")
+            if kind in ("attn", "local", "global"):
+                total += attn + (moe_mlp if use_moe else mlp)
+            elif kind == "mamba":
+                total += mamba + (moe_mlp if use_moe else mlp)
+            elif kind in ("mlstm", "slstm"):
+                total += xl
+            total += 2 * d                      # norms
+        total += self.vocab_size * d            # embedding
+        if not self.tie_embeddings:
+            total += self.vocab_size * d        # lm head
+        if self.is_encoder_decoder:
+            total += self.n_enc_layers * (attn + mlp + 2 * d)
+            total += self.n_enc_layers * attn   # cross-attn in decoder
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top-k experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        hd = self.resolved_head_dim
+        d = self.d_model
+        if self.mlp_type in ("swiglu", "geglu"):
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        dense_total = self.param_count()
+        # subtract inactive experts on MoE layers
+        n_moe_layers = sum(
+            1 for li in range(self.n_layers)
+            if li % self.moe_every == (self.moe_every - 1)
+            and self.block_pattern[li % len(self.block_pattern)] != "none")
+        inactive = n_moe_layers * mlp * (self.n_experts - self.topk_experts)
+        return int(dense_total - inactive)
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test config: same family/pattern, tiny dims."""
+        period = len(self.block_pattern)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=period * min(2, self.n_periods),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=max(1, min(2, self.n_kv_heads)),
+            head_dim=16,
+            d_ff=0 if self.d_ff == 0 else 128,
+            vocab_size=512,
+            n_experts=min(4, self.n_experts),
+            topk_experts=min(2, self.topk_experts) if self.topk_experts else 0,
+            ssm_state=8,
+            ssm_expand=2,
+            n_enc_layers=min(2, self.n_enc_layers),
+            enc_positions=16,
+            max_position=4096,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            dtype=jnp.float32,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Shape config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+def cell_applicable(arch: "ArchConfig", shape: ShapeConfig) -> tuple:
+    """(applicable, reason) for an (arch, shape) cell.
+
+    long_500k requires a sub-quadratic decode path (SSM / hybrid / windowed);
+    pure full-attention archs skip it (recorded in the roofline table).
+    """
+    if shape.name == "long_500k" and not arch.subquadratic:
+        return False, "long_500k skipped: pure full-attention arch"
+    if shape.kind == "decode" and arch.is_encoder_decoder and shape.seq_len > arch.max_position:
+        return False, f"decode seq {shape.seq_len} exceeds enc-dec max_position"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig,
+                kv_repeat: int = 1, kv_quant: bool = False) -> dict:
+    """Dry-run inputs for one (arch, shape) cell.
+
+    train:   tokens + labels, full sequence.
+    prefill: tokens, full sequence (returns logits of last position + cache).
+    decode:  one new token per sequence + a filled KV cache of seq_len.
+    Modality frontends are stubs: the audio/vq encoders are replaced by
+    precomputed frame/patch embeddings supplied as inputs.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    specs: dict = {}
+    if shape.kind == "train":
+        specs["tokens"] = sds((B, S), i32)
+        specs["labels"] = sds((B, S), i32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = sds((B, S), i32)
+    else:  # decode
+        specs["tokens"] = sds((B, 1), i32)
+        specs["cache"] = kv_cache_specs(arch, B, S, kv_repeat, kv_quant)
+        specs["position"] = sds((B,), i32)
+    if arch.is_encoder_decoder:
+        # audio stub: precomputed frame embeddings from the conv frontend
+        specs["encoder_frames"] = sds(
+            (B, arch.enc_positions, arch.d_model), arch.dtype)
+    return specs
+
+
+def kv_cache_specs(arch: ArchConfig, batch: int, seq_len: int,
+                   kv_repeat: int = 1, kv_quant: bool = False) -> dict:
+    """ShapeDtypeStruct pytree for a filled decode cache.
+
+    Derived from the model's own prefill function via eval_shape (no
+    allocation), so the dry-run cache layout can never drift from the
+    implementation.  Decode-cell semantics: the cache was allocated at
+    seq_len, holds seq_len-1 tokens, and the new token lands at the last
+    slot (position = seq_len - 1).
+    """
+    from repro.models.factory import cache_specs  # local import, no cycle
+    return cache_specs(arch, batch, seq_len, kv_repeat, kv_quant)

@@ -1,0 +1,45 @@
+"""LargeVis default hyper-parameters — the paper's own configuration (§4.3).
+
+These are the defaults the paper reports as *stable across datasets*:
+perplexity 50, K=150 neighbors, M=5 negatives, gamma=7, rho0=1.0,
+f(x) = 1/(1+x^2), T proportional to N.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LargeVisConfig:
+    # --- KNN graph construction (paper §3.1, Algo 1) ---
+    n_neighbors: int = 150          # K
+    n_trees: int = 8                # NT random projection "trees" (tables)
+    n_explore_iters: int = 1        # Iter; paper: 1-3 suffices
+    tree_depth: int = 0             # 0 -> auto from N and leaf target
+    leaf_target: int = 64           # target points per bucket
+    window: int = 64                # sorted-window candidate half-width
+    explore_sample: int = 0         # 0 -> auto (candidates per explore iter)
+    rp_mode: str = "hash"           # "hash" (matmul, TPU-native) | "tree"
+    perplexity: float = 50.0        # u in Eqn (1)
+    perplexity_iters: int = 64      # bisection steps for sigma_i
+    # --- layout (paper §3.2) ---
+    out_dim: int = 2                # s
+    n_negatives: int = 5            # M
+    gamma: float = 7.0
+    rho0: float = 1.0               # initial lr; rho_t = rho0 * (1 - t/T)
+    samples_per_node: int = 10_000  # T = samples_per_node * N edge samples
+    prob_fn: str = "inv_quadratic"  # f(x)=1/(1+a x^2); see objective.py
+    prob_a: float = 1.0
+    grad_clip: float = 5.0          # reference-impl per-coordinate clip
+    batch_size: int = 4096          # edge samples per device step (TPU adapt)
+    sync_every: int = 1             # H: local-SGD sync period (1 = sync SGD)
+    init_scale: float = 1e-4        # initial layout ~ N(0, init_scale)
+    neg_power: float = 0.75         # P_n(j) ∝ d_j^0.75
+    dtype: Any = jnp.float32
+    seed: int = 0
+
+
+DEFAULT = LargeVisConfig()

@@ -1,0 +1,3 @@
+"""The paper's primary contribution: LargeVis (KNN graph + probabilistic
+layout) as a composable JAX module."""
+from repro.core.largevis import largevis, build_graph, layout_graph, LargeVisResult  # noqa: F401

@@ -1,0 +1,55 @@
+"""LINE first-order baseline (Tang et al. 2015) learned directly in 2D.
+
+The paper shows embedding objectives are NOT layout objectives (Fig 5:
+'the performance of LINE is very bad' as a visualizer) — this baseline
+exists to reproduce that negative result.  First-order proximity:
+P(e_ij) = sigmoid(y_i . y_j), same edge/negative samplers as LargeVis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sampler import EdgeSampler, NodeSampler, sample_alias
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("n_negatives", "batch"))
+def line_step(y, key, t_frac, *, edge_src, edge_dst, edge_thr, edge_alias,
+              neg_thr, neg_alias, n_negatives: int, batch: int,
+              rho0: float = 0.025, clip: float = 5.0):
+    ke, kn = jax.random.split(key)
+    e = sample_alias(ke, edge_thr, edge_alias, (batch,))
+    i, j = edge_src[e], edge_dst[e]
+    negs = sample_alias(kn, neg_thr, neg_alias, (batch, n_negatives))
+
+    def loss(y):
+        yi, yj, yn = y[i], y[j], y[negs]
+        pos = -jax.nn.log_sigmoid(jnp.sum(yi * yj, -1))
+        neg = -jax.nn.log_sigmoid(-jnp.einsum("bd,bmd->bm", yi, yn))
+        return jnp.sum(pos) + jnp.sum(neg)
+
+    g = jax.grad(loss)(y)
+    g = jnp.clip(g, -clip, clip)
+    lr = rho0 * jnp.maximum(1.0 - t_frac, 1e-4)
+    return y - lr * g
+
+
+def line_layout(key, edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
+                n_nodes: int, *, out_dim: int = 2, samples_per_node: int = 1000,
+                n_negatives: int = 5, batch: int = 4096, rho0: float = 0.025):
+    ky, kr = jax.random.split(key)
+    y = jax.random.normal(ky, (n_nodes, out_dim)) * 1e-3
+    total = samples_per_node * n_nodes
+    steps = max(1, total // batch)
+    for t in range(steps):
+        y = line_step(y, jax.random.fold_in(kr, t), jnp.float32(t / steps),
+                      edge_src=edge_sampler.src, edge_dst=edge_sampler.dst,
+                      edge_thr=edge_sampler.threshold,
+                      edge_alias=edge_sampler.alias,
+                      neg_thr=neg_sampler.threshold,
+                      neg_alias=neg_sampler.alias,
+                      n_negatives=n_negatives, batch=batch, rho0=rho0)
+    return y

@@ -1,0 +1,28 @@
+"""NN-Descent baseline (Dong et al. 2011): neighbor exploring from a RANDOM
+initial graph (no projection forest).  This is the 'neighbor exploring
+alone' arm of the paper's Fig 2 comparison; LargeVis = forest init + the
+same exploring machinery."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.neighbor_explore import neighbor_explore
+from repro.kernels import ops
+
+
+def random_knn_init(x, k: int, key):
+    """Uniform random neighbor ids + their true distances."""
+    n = x.shape[0]
+    idx = jax.random.randint(key, (n, k), 0, n)
+    diff = (x[idx] - x[:, None, :]).astype(jnp.float32)
+    dist = jnp.sum(diff * diff, axis=-1)
+    return idx.astype(jnp.int32), dist
+
+
+def nn_descent(x, k: int, *, iters: int = 4, key=None, sample: int = 0):
+    if key is None:
+        key = jax.random.key(0)
+    k1, k2 = jax.random.split(key)
+    idx, dist = random_knn_init(x, k, k1)
+    return neighbor_explore(x, idx, dist, iters=iters, sample=sample, key=k2)

@@ -1,0 +1,70 @@
+"""Exact symmetric-SNE and t-SNE layout baselines (Fig 5 / Table 2 arms).
+
+The paper's comparison uses Barnes-Hut acceleration to reach millions of
+points; at this container's benchmark scale (N <= ~10k) the exact O(N^2)
+gradient is both simpler and a *stronger* baseline (no tree-approximation
+error), so quality comparisons are conservative.  Both run full-batch
+gradient descent with momentum + early exaggeration per van der Maaten's
+settings; both consume the same LargeVis-built KNN graph (paper §4.3:
+"All visualization algorithms use the same KNN graphs ... as input").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _p_matrix(knn_idx, weights, n: int) -> jax.Array:
+    """Dense symmetric P from the sparse weighted KNN graph."""
+    w = weights / jnp.maximum(weights.sum(), 1e-12)
+    P = jnp.zeros((n, n), jnp.float32)
+    rows = jnp.repeat(jnp.arange(n), knn_idx.shape[1])
+    P = P.at[rows, knn_idx.reshape(-1)].add(w.reshape(-1))
+    P = 0.5 * (P + P.T)
+    return jnp.maximum(P / jnp.maximum(P.sum(), 1e-12), 1e-12)
+
+
+@functools.partial(jax.jit, static_argnames=("student_t",))
+def _grad(y, P, student_t: bool):
+    d2 = jnp.sum((y[:, None, :] - y[None, :, :]) ** 2, axis=-1)
+    if student_t:
+        num = 1.0 / (1.0 + d2)
+    else:
+        num = jnp.exp(-d2)
+    num = num.at[jnp.diag_indices(y.shape[0])].set(0.0)
+    Q = jnp.maximum(num / jnp.maximum(num.sum(), 1e-12), 1e-12)
+    PQ = P - Q
+    if student_t:
+        W = PQ * num
+    else:
+        W = PQ
+    g = 4.0 * (jnp.sum(W, axis=1, keepdims=True) * y - W @ y)
+    kl = jnp.sum(P * (jnp.log(P) - jnp.log(Q)))
+    return g, kl
+
+
+def tsne_layout(knn_idx, weights, *, n_iter: int = 1000, lr: float = 200.0,
+                momentum: float = 0.8, early_exag: float = 12.0,
+                exag_iters: int = 250, student_t: bool = True, key=None,
+                out_dim: int = 2):
+    """Returns (y (N,2), kl_history).  student_t=False => symmetric SNE."""
+    n = knn_idx.shape[0]
+    if key is None:
+        key = jax.random.key(0)
+    P = _p_matrix(knn_idx, weights, n)
+    y = jax.random.normal(key, (n, out_dim)) * 1e-4
+    v = jnp.zeros_like(y)
+    kls = []
+    for it in range(n_iter):
+        Pe = P * early_exag if it < exag_iters else P
+        g, kl = _grad(y, Pe, student_t)
+        mom = 0.5 if it < exag_iters else momentum
+        v = mom * v - lr * g
+        y = y + v
+        y = y - y.mean(axis=0)
+        if it % 100 == 0:
+            kls.append(float(kl))
+    return y, kls

@@ -1,0 +1,96 @@
+"""Vantage-point tree KNN (Yianilos 1993) — the t-SNE baseline in Fig 2.
+
+Host-side numpy implementation (a pointer-chasing metric tree is a CPU
+algorithm; it exists here as the *baseline the paper beats*, not as a TPU
+path — see DESIGN.md).  Build: random vantage point, median split on
+distance.  Query: best-first descent with triangle-inequality pruning and a
+``tau`` search radius; an ``eps`` slack turns it into the approximate
+variant used for the time/recall trade-off curve.
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+
+class VPTree:
+    __slots__ = ("point", "index", "mu", "inside", "outside")
+
+    def __init__(self, point, index, mu, inside, outside):
+        self.point = point
+        self.index = index
+        self.mu = mu
+        self.inside = inside
+        self.outside = outside
+
+
+def build_vptree(x: np.ndarray, idx: np.ndarray = None,
+                 rng: np.random.Generator = None, leaf: int = 1):
+    if rng is None:
+        rng = np.random.default_rng(0)
+    if idx is None:
+        idx = np.arange(x.shape[0])
+    if len(idx) == 0:
+        return None
+    vp_pos = rng.integers(len(idx))
+    vp = idx[vp_pos]
+    rest = np.delete(idx, vp_pos)
+    if len(rest) == 0:
+        return VPTree(x[vp], vp, 0.0, None, None)
+    d = np.linalg.norm(x[rest] - x[vp], axis=1)
+    mu = float(np.median(d))
+    inside = rest[d < mu]
+    outside = rest[d >= mu]
+    return VPTree(x[vp], vp, mu,
+                  build_vptree(x, inside, rng, leaf),
+                  build_vptree(x, outside, rng, leaf))
+
+
+def query_vptree(root: VPTree, q: np.ndarray, k: int,
+                 eps: float = 0.0) -> np.ndarray:
+    """k nearest indices to q.  eps>0 prunes more aggressively (approx)."""
+    heap: list = []           # max-heap of (-dist, idx)
+    tau = [np.inf]
+
+    def search(node):
+        if node is None:
+            return
+        d = float(np.linalg.norm(q - node.point))
+        if d < tau[0]:
+            if len(heap) == k:
+                heapq.heappop(heap)
+            heapq.heappush(heap, (-d, node.index))
+            if len(heap) == k:
+                tau[0] = -heap[0][0]
+        shrink = 1.0 + eps
+        if d < node.mu:
+            if d - tau[0] / shrink < node.mu:
+                search(node.inside)
+            if d + tau[0] / shrink >= node.mu:
+                search(node.outside)
+        else:
+            if d + tau[0] / shrink >= node.mu:
+                search(node.outside)
+            if d - tau[0] / shrink < node.mu:
+                search(node.inside)
+
+    search(root)
+    out = sorted(((-nd, i) for nd, i in heap))
+    return np.array([i for _, i in out], np.int32)
+
+
+def vptree_knn(x: np.ndarray, k: int, eps: float = 0.0,
+               n_query: int = None) -> np.ndarray:
+    """(n_query, k) self-excluding KNN via one vp-tree."""
+    import sys
+    sys.setrecursionlimit(100000)
+    x = np.asarray(x, np.float32)
+    root = build_vptree(x)
+    n = x.shape[0] if n_query is None else min(n_query, x.shape[0])
+    out = np.zeros((n, k), np.int32)
+    for i in range(n):
+        nn = query_vptree(root, x[i], k + 1, eps=eps)
+        nn = nn[nn != i][:k]
+        out[i, :len(nn)] = nn
+    return out

@@ -1,0 +1,71 @@
+"""LargeVis top-level API: data matrix in, 2D/3D layout out.
+
+    from repro.core.largevis import largevis
+    result = largevis(x, key=jax.random.key(0))
+    coords = result.y          # (N, 2)
+
+Pipeline = the paper's two stages: (1) approximate KNN graph (projection
+forest + neighbor exploring + perplexity-calibrated weights), (2)
+probabilistic layout via edge-sampling SGD.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.largevis_default import DEFAULT, LargeVisConfig
+from repro.core import knn as knn_lib
+from repro.core import layout as layout_lib
+from repro.core import perplexity as perp_lib
+from repro.core import sampler as sampler_lib
+
+
+@dataclasses.dataclass
+class LargeVisResult:
+    y: jax.Array                 # (N, s) layout
+    knn_idx: jax.Array           # (N, K)
+    knn_dist: jax.Array          # (N, K) squared distances
+    weights: jax.Array           # (N, K) symmetrized edge weights
+    timings: dict
+    edge_samples: int
+
+
+def build_graph(x, key, cfg: LargeVisConfig = DEFAULT):
+    """Stage 1: KNN graph + calibrated weights."""
+    t0 = time.time()
+    idx, dist = knn_lib.build_knn_graph(x, key, cfg)
+    t1 = time.time()
+    w = perp_lib.edge_weights(idx, dist, cfg.perplexity,
+                              iters=cfg.perplexity_iters)
+    t2 = time.time()
+    return idx, dist, w, {"knn_s": t1 - t0, "weights_s": t2 - t1}
+
+
+def layout_graph(knn_idx, weights, key, cfg: LargeVisConfig = DEFAULT,
+                 callback=None):
+    """Stage 2: probabilistic layout of a weighted KNN graph."""
+    t0 = time.time()
+    edge_s = sampler_lib.build_edge_sampler(knn_idx, weights)
+    neg_s = sampler_lib.build_negative_sampler(knn_idx, weights,
+                                               power=cfg.neg_power)
+    t1 = time.time()
+    res = layout_lib.run_layout(key, edge_s, neg_s, knn_idx.shape[0], cfg,
+                                callback=callback)
+    t2 = time.time()
+    return res, {"sampler_s": t1 - t0, "layout_s": t2 - t1}
+
+
+def largevis(x, key=None, cfg: LargeVisConfig = DEFAULT,
+             callback=None) -> LargeVisResult:
+    if key is None:
+        key = jax.random.key(cfg.seed)
+    kg, kl = jax.random.split(key)
+    idx, dist, w, t_graph = build_graph(x, kg, cfg)
+    res, t_layout = layout_graph(idx, w, kl, cfg, callback=callback)
+    return LargeVisResult(y=res.y, knn_idx=idx, knn_dist=dist, weights=w,
+                          timings={**t_graph, **t_layout},
+                          edge_samples=res.edge_samples)

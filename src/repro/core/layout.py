@@ -1,0 +1,187 @@
+"""Layout optimization: batched edge-sampling SGD (paper §3.2, TPU-adapted).
+
+The paper's Hogwild (batch-1 async updates) becomes batched synchronous
+edge-sampling SGD with scatter-add — intra-batch collisions resolve
+deterministically, and the paper's own sparsity argument ("conflicting
+updates are rare") is why the batched dynamics match batch-1 dynamics.  For
+multi-device runs, ``sync_every`` (H) gives local-SGD semantics: each shard
+updates its own replica for H steps, then replicas average — the principled
+TPU analogue of Hogwild staleness (DESIGN.md §2).
+
+lr schedule: rho_t = rho0 * (1 - t/T), batch-size-corrected; per-coordinate
+gradient clip as in the reference implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import objective
+from repro.core.sampler import EdgeSampler, NodeSampler, sample_alias
+from repro.kernels import ops
+
+
+@functools.partial(
+    jax.jit, donate_argnums=(0,),
+    static_argnames=("n_negatives", "prob_fn", "a", "gamma", "clip",
+                     "n_nodes", "batch"))
+def layout_step(y, key, t_frac, *, edge_src, edge_dst, edge_thr, edge_alias,
+                neg_thr, neg_alias, n_negatives: int, n_nodes: int,
+                prob_fn: str = "inv_quadratic", a: float = 1.0,
+                gamma: float = 7.0, clip: float = 5.0, rho0: float = 1.0,
+                batch: int = 4096):
+    """One SGD step over a freshly sampled edge batch.  t_frac = t/T."""
+    ke, kn, kb = jax.random.split(key, 3)
+    e = sample_alias(ke, edge_thr, edge_alias, (batch,))
+    i, j = edge_src[e], edge_dst[e]
+    negs = sample_alias(kn, neg_thr, neg_alias, (batch, n_negatives))
+    # mask collisions: negative == source or target of the positive edge
+    neg_mask = ((negs != i[:, None]) & (negs != j[:, None])).astype(
+        jnp.float32)
+
+    yi, yj, yneg = y[i], y[j], y[negs]
+    if prob_fn == "inv_quadratic":
+        gi, gj, gneg = ops.largevis_grads(yi, yj, yneg, neg_mask, gamma=gamma,
+                                          a=a, clip=clip)
+    else:
+        gi, gj, gneg = objective.grads_autodiff(yi, yj, yneg, neg_mask,
+                                                prob_fn=prob_fn, a=a,
+                                                gamma=gamma, clip=clip)
+    lr = rho0 * jnp.maximum(1.0 - t_frac, 1e-4)
+    # single fused scatter-add (3 separate .at[].add calls triple the
+    # y read/write traffic — §Perf hillclimb 3 iter 2)
+    s = y.shape[1]
+    idx = jnp.concatenate([i, j, negs.reshape(-1)])
+    upd = jnp.concatenate([gi, gj, gneg.reshape(-1, s)], axis=0)
+    return y.at[idx].add(-lr * upd)
+
+
+@dataclasses.dataclass
+class LayoutResult:
+    y: jax.Array
+    steps: int
+    edge_samples: int
+
+
+# ---------------------------------------------------------------------------
+# Local-SGD multi-device mode (the TPU analogue of the paper's Hogwild)
+# ---------------------------------------------------------------------------
+
+def make_local_sgd_fns(mesh, cfg, n_nodes: int, *, batch: int):
+    """Returns (local_steps_fn, sync_fn) over replicated-per-device layouts.
+
+    Each device holds its own full replica of Y (leading replica axis,
+    sharded over "data"), samples its own edge stream (RNG folded with the
+    device index), and applies ``sync_every`` (H) local updates between
+    psum-averages — the paper's "conflicting updates are rare on sparse
+    graphs" argument, made explicit: replicas drift for H steps and the
+    drift is averaged away.  H=1 degenerates to synchronous data-parallel.
+    """
+    from jax.sharding import PartitionSpec as P
+    n_dev = mesh.shape["data"]
+    dp_spec = P("data", None, None)
+    rep = P()
+
+    def local_steps(y_rep, seed, t_frac0, dt_frac, edge_src, edge_dst,
+                    edge_thr, edge_alias, neg_thr, neg_alias):
+        """H local steps on each replica (shard_map over 'data')."""
+
+        def body(y_loc, seed, t_frac0, dt_frac, edge_src, edge_dst,
+                 edge_thr, edge_alias, neg_thr, neg_alias):
+            dev = jax.lax.axis_index("data")
+            y = y_loc[0]
+
+            def one(i, y):
+                key = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.key(seed[0]), dev), i)
+                return layout_step(
+                    y, key, t_frac0 + dt_frac * i.astype(jnp.float32),
+                    edge_src=edge_src, edge_dst=edge_dst, edge_thr=edge_thr,
+                    edge_alias=edge_alias, neg_thr=neg_thr,
+                    neg_alias=neg_alias, n_negatives=cfg.n_negatives,
+                    n_nodes=n_nodes, prob_fn=cfg.prob_fn, a=cfg.prob_a,
+                    gamma=cfg.gamma, clip=cfg.grad_clip, rho0=cfg.rho0,
+                    batch=batch)
+
+            y = jax.lax.fori_loop(0, cfg.sync_every, one, y)
+            return y[None]
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(dp_spec, rep, rep, rep, rep, rep, rep, rep, rep, rep),
+            out_specs=dp_spec, check_vma=False,
+        )(y_rep, seed, t_frac0, dt_frac, edge_src, edge_dst, edge_thr,
+          edge_alias, neg_thr, neg_alias)
+
+    def sync(y_rep):
+        """psum-average the replicas (the every-H synchronization)."""
+
+        def body(y_loc):
+            return jax.lax.pmean(y_loc, "data")
+
+        return jax.shard_map(body, mesh=mesh, in_specs=dp_spec,
+                             out_specs=dp_spec, check_vma=False)(y_rep)
+
+    return jax.jit(local_steps), jax.jit(sync)
+
+
+def run_layout_local_sgd(key, edge_sampler: EdgeSampler,
+                         neg_sampler: NodeSampler, n_nodes: int, cfg,
+                         mesh) -> LayoutResult:
+    """Multi-device local-SGD layout driver (paper's async SGD, TPU form)."""
+    n_dev = mesh.shape["data"]
+    ky, kr = jax.random.split(key)
+    y0 = (jax.random.normal(ky, (n_nodes, cfg.out_dim), jnp.float32)
+          * cfg.init_scale)
+    y_rep = jnp.broadcast_to(y0, (n_dev,) + y0.shape)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    y_rep = jax.device_put(y_rep, NamedSharding(mesh, P("data", None, None)))
+
+    batch = cfg.batch_size
+    total = int(cfg.samples_per_node) * n_nodes
+    # every device consumes batch edges per local step
+    steps = max(1, total // (batch * n_dev))
+    H = max(1, cfg.sync_every)
+    n_rounds = max(1, steps // H)
+    local_steps, sync = make_local_sgd_fns(mesh, cfg, n_nodes, batch=batch)
+    dt = 1.0 / max(steps, 1)
+    for r in range(n_rounds):
+        seed = jnp.asarray([int(jax.random.randint(
+            jax.random.fold_in(kr, r), (), 0, 2**31 - 1))], jnp.int32)
+        y_rep = local_steps(
+            y_rep, seed, jnp.float32(r * H * dt), jnp.float32(dt),
+            edge_sampler.src, edge_sampler.dst, edge_sampler.threshold,
+            edge_sampler.alias, neg_sampler.threshold, neg_sampler.alias)
+        y_rep = sync(y_rep)
+    return LayoutResult(y=y_rep[0], steps=n_rounds * H,
+                        edge_samples=n_rounds * H * batch * n_dev)
+
+
+def run_layout(key, edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
+               n_nodes: int, cfg, *,
+               callback: Optional[Callable] = None) -> LayoutResult:
+    """Drive layout_step for T = samples_per_node * N edge samples."""
+    ky, kr = jax.random.split(key)
+    y = (jax.random.normal(ky, (n_nodes, cfg.out_dim), jnp.float32)
+         * cfg.init_scale)
+    total = int(cfg.samples_per_node) * n_nodes
+    batch = min(cfg.batch_size, max(total, 1))
+    steps = max(1, total // batch)
+    kwargs = dict(
+        edge_src=edge_sampler.src, edge_dst=edge_sampler.dst,
+        edge_thr=edge_sampler.threshold, edge_alias=edge_sampler.alias,
+        neg_thr=neg_sampler.threshold, neg_alias=neg_sampler.alias,
+        n_negatives=cfg.n_negatives, n_nodes=n_nodes, prob_fn=cfg.prob_fn,
+        a=cfg.prob_a, gamma=cfg.gamma, clip=cfg.grad_clip, rho0=cfg.rho0,
+        batch=batch)
+    for t in range(steps):
+        y = layout_step(y, jax.random.fold_in(kr, t),
+                        jnp.float32(t / steps), **kwargs)
+        if callback is not None and (t % max(1, steps // 20) == 0):
+            callback(t, steps, y)
+    return LayoutResult(y=y, steps=steps, edge_samples=steps * batch)

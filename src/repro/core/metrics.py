@@ -1,0 +1,45 @@
+"""Evaluation metrics: KNN recall (graph accuracy, paper Figs 2-3) and the
+KNN-classifier accuracy on 2D coordinates (paper's layout quality proxy,
+Fig 5)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import knn as knn_lib
+
+
+def knn_classifier_accuracy(y2d, labels, *, k: int = 5,
+                            n_test: int = 1000, key=None) -> float:
+    """Hold out n_test points; classify each by majority label of its k
+    nearest neighbors (in the 2D layout) among the remaining points."""
+    if key is None:
+        key = jax.random.key(0)
+    n = y2d.shape[0]
+    n_test = min(n_test, n // 4)
+    perm = jax.random.permutation(key, n)
+    test, train = perm[:n_test], perm[n_test:]
+    from repro.kernels import ops
+    d = ops.pairwise_sqdist(y2d[test], y2d[train])
+    _, ni = jax.lax.top_k(-d, k)
+    votes = labels[train][ni]                             # (n_test, k)
+    n_classes = int(labels.max()) + 1
+    counts = jax.nn.one_hot(votes, n_classes).sum(axis=1)
+    pred = jnp.argmax(counts, axis=1)
+    return float(jnp.mean((pred == labels[test]).astype(jnp.float32)))
+
+
+def graph_recall(x, knn_idx, *, n_eval: int = 2000, key=None) -> float:
+    """Recall vs exact KNN on a random node subset (paper's 'accuracy')."""
+    if key is None:
+        key = jax.random.key(1)
+    n, k = knn_idx.shape
+    rows = jax.random.permutation(key, n)[:min(n_eval, n)]
+    from repro.kernels import ops
+    d = ops.pairwise_sqdist(x[rows], x)
+    d = d.at[jnp.arange(rows.shape[0]), rows].set(3.4e38)
+    _, true_idx = jax.lax.top_k(-d, k)
+    got = knn_idx[rows]
+    matches = (got[:, :, None] == true_idx[:, None, :]).any(-1)
+    return float(jnp.mean(matches.astype(jnp.float32)))

@@ -1,0 +1,57 @@
+"""Probabilistic layout model (paper §3.2, Eqn 3-6).
+
+P(e_ij = 1) = f(||y_i - y_j||).  Candidate probability functions compared in
+the paper's Fig. 4 — f(x) = 1/(1 + a x^2) family and f(x) = 1/(1+exp(x^2));
+the long-tailed a=1 inverse-quadratic wins (crowding problem, same argument
+as t-SNE's Student-t).
+
+Gradients for the winner are hand-derived (and fused in the Pallas kernel);
+the other variants go through autodiff — both paths are exercised by
+benchmarks/fig4.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+PROB_FNS = ("inv_quadratic", "exp_quadratic")
+
+
+def log_f(d2: jax.Array, prob_fn: str, a: float) -> jax.Array:
+    """log P(edge) as a function of squared distance."""
+    if prob_fn == "inv_quadratic":
+        return -jnp.log1p(a * d2)
+    if prob_fn == "exp_quadratic":                        # f = 1/(1+e^{x^2})
+        return -jax.nn.softplus(d2)
+    raise ValueError(prob_fn)
+
+
+def log_1mf(d2: jax.Array, prob_fn: str, a: float,
+            eps: float = 0.1) -> jax.Array:
+    """log(1 - P(edge)); eps guards the collision singularity."""
+    if prob_fn == "inv_quadratic":
+        return jnp.log(a * d2 + eps) - jnp.log1p(a * d2)
+    if prob_fn == "exp_quadratic":                        # 1-f = 1/(1+e^-x^2)
+        return -jax.nn.softplus(-d2)
+    raise ValueError(prob_fn)
+
+
+def edge_batch_loss(yi, yj, yneg, neg_mask, *, prob_fn: str = "inv_quadratic",
+                    a: float = 1.0, gamma: float = 7.0) -> jax.Array:
+    """Negated Eqn (6) over a sampled batch (to MINIMIZE)."""
+    d2 = jnp.sum((yi - yj) ** 2, axis=-1)
+    pos = -log_f(d2, prob_fn, a)
+    dn2 = jnp.sum((yi[:, None, :] - yneg) ** 2, axis=-1)
+    neg = -gamma * log_1mf(dn2, prob_fn, a) * neg_mask
+    return jnp.sum(pos) + jnp.sum(neg)
+
+
+@functools.partial(jax.jit, static_argnames=("prob_fn", "a", "gamma", "clip"))
+def grads_autodiff(yi, yj, yneg, neg_mask, *, prob_fn: str, a: float = 1.0,
+                   gamma: float = 7.0, clip: float = 5.0):
+    """(gi, gj, gneg) via autodiff — used for non-default prob functions."""
+    g = jax.grad(edge_batch_loss, argnums=(0, 1, 2))(
+        yi, yj, yneg, neg_mask, prob_fn=prob_fn, a=a, gamma=gamma)
+    return tuple(jnp.clip(x, -clip, clip) for x in g)

@@ -1,0 +1,85 @@
+"""Edge weights for the KNN graph (paper Eqn 1-2, same scheme as t-SNE).
+
+sigma_i is calibrated per node so the conditional distribution p_{.|i} over
+its K neighbors has a target perplexity u: a fixed-iteration vectorized
+bisection on beta_i = 1/(2 sigma_i^2) — all N rows in parallel (the paper's
+sequential per-point search is embarrassingly parallel).
+
+Symmetrization w_ij = (p_{j|i} + p_{i|j}) / 2N needs the reverse weight
+p_{i|j}: for each directed edge (i, j) we look up i inside knn(j) — a tiled
+(T, K, K) gather + compare, no host round-trips.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def calibrate_p(knn_sqdist: jax.Array, perplexity: float,
+                iters: int = 64) -> jax.Array:
+    """Row-stochastic p_{j|i} (N, K) at the target perplexity (Eqn 1)."""
+    d2 = knn_sqdist.astype(jnp.float32)
+    d2 = d2 - d2.min(axis=1, keepdims=True)               # stability shift
+    target = jnp.log(perplexity)                          # nats
+
+    def entropy(beta):
+        logits = -beta[:, None] * d2
+        logz = jax.nn.logsumexp(logits, axis=1)
+        p = jnp.exp(logits - logz[:, None])
+        return logz + beta * jnp.sum(p * d2, axis=1), p
+
+    def body(carry, _):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        h, _ = entropy(mid)
+        too_flat = h > target                              # entropy high -> increase beta
+        lo = jnp.where(too_flat, mid, lo)
+        hi = jnp.where(too_flat, hi, mid)
+        return (lo, hi), None
+
+    n = d2.shape[0]
+    lo = jnp.zeros((n,), jnp.float32)
+    hi = jnp.full((n,), 1e5, jnp.float32) / (
+        jnp.maximum(jnp.mean(d2, axis=1), 1e-8))
+    (lo, hi), _ = jax.lax.scan(body, (lo, hi), None, length=iters)
+    _, p = entropy(0.5 * (lo + hi))
+    return p
+
+
+def _reverse_p_tile(knn_idx, p, rows):
+    """p_{i|j} for each edge (i, j=knn[i][k]) in a tile of rows."""
+    nbrs = knn_idx[rows]                                  # (T, K)
+    back = knn_idx[nbrs]                                  # (T, K, K) = knn(j)
+    hit = back == rows[:, None, None]                     # where knn(j) == i
+    pj = p[nbrs]                                          # (T, K, K) = p_{.|j}
+    return jnp.sum(jnp.where(hit, pj, 0.0), axis=-1)      # (T, K)
+
+
+def symmetrize(knn_idx: jax.Array, p: jax.Array, *,
+               tile: int = 4096) -> jax.Array:
+    """w_ij = (p_{j|i} + p_{i|j}) / (2N) per directed edge slot (Eqn 2)."""
+    N, K = knn_idx.shape
+    tile = min(tile, N)
+    fn = jax.jit(_reverse_p_tile)
+    outs = []
+    for lo in range(0, N, tile):
+        rows = jnp.arange(lo, min(lo + tile, N), dtype=jnp.int32)
+        outs.append(fn(knn_idx, p, rows))
+    rev = jnp.concatenate(outs)
+    return (p + rev) / (2.0 * N)
+
+
+def edge_weights(knn_idx, knn_sqdist, perplexity: float, *,
+                 iters: int = 64) -> jax.Array:
+    p = calibrate_p(knn_sqdist, perplexity, iters=iters)
+    return symmetrize(knn_idx, p)
+
+
+def perplexity_of(p: jax.Array) -> jax.Array:
+    """Realized perplexity per row (for validation)."""
+    h = -jnp.sum(jnp.where(p > 0, p * jnp.log(p), 0.0), axis=1)
+    return jnp.exp(h)

@@ -1,0 +1,74 @@
+"""Synthetic datasets for tests/benchmarks (offline container: the paper's
+corpora are unavailable, so structured stand-ins with the same shape —
+clustered high-dim data with labels — back the quality metrics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gaussian_mixture(key, n: int, d: int, n_clusters: int,
+                     sep: float = 6.0, scale: float = 1.0):
+    """Well-separated clusters on a random simplex.  Returns (x, labels)."""
+    kc, kx, kl = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (n_clusters, d)) * sep / np.sqrt(2)
+    labels = jax.random.randint(kl, (n,), 0, n_clusters)
+    x = centers[labels] + jax.random.normal(kx, (n, d)) * scale
+    return x.astype(jnp.float32), labels
+
+
+def swiss_roll(key, n: int, d: int = 3, noise: float = 0.05):
+    """Classic manifold; extra dims are noise-padded.  Labels = roll angle
+    quartile (for the KNN-classifier metric)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    t = 1.5 * np.pi * (1 + 2 * jax.random.uniform(k1, (n,)))
+    h = 21 * jax.random.uniform(k2, (n,))
+    x3 = jnp.stack([t * jnp.cos(t), h, t * jnp.sin(t)], axis=1)
+    x3 = x3 + noise * jax.random.normal(k3, (n, 3))
+    if d > 3:
+        pad = 0.01 * jax.random.normal(jax.random.fold_in(key, 9),
+                                       (n, d - 3))
+        x3 = jnp.concatenate([x3, pad], axis=1)
+    labels = jnp.clip(((t - t.min()) / (t.max() - t.min()) * 4), 0, 3)
+    return x3.astype(jnp.float32), labels.astype(jnp.int32)
+
+
+def mnist_like(key, n: int = 4096, d: int = 784, n_classes: int = 10):
+    """MNIST-shaped stand-in: class templates + structured deformation."""
+    kt, kd, kl, kn = jax.random.split(key, 4)
+    templates = jax.random.normal(kt, (n_classes, d)) * 2.0
+    basis = jax.random.normal(kd, (n_classes, 8, d)) * 0.8
+    labels = jax.random.randint(kl, (n,), 0, n_classes)
+    coeff = jax.random.normal(jax.random.fold_in(kn, 1), (n, 8))
+    x = templates[labels] + jnp.einsum("nk,nkd->nd", coeff, basis[labels])
+    x = x + 0.3 * jax.random.normal(kn, (n, d))
+    return x.astype(jnp.float32), labels
+
+
+def token_stream(key, n_batches: int, batch: int, seq: int, vocab: int,
+                 markov: float = 0.9):
+    """Deterministic synthetic token batches with learnable structure:
+    next = perm[prev] with prob ``markov`` (else uniform) — cross-entropy
+    floor ~= H(markov) << ln(vocab), so training loss visibly drops.
+    markov=0 gives uniform-random tokens (floor = ln(vocab))."""
+    perm = jax.random.permutation(jax.random.fold_in(key, 10**6), vocab)
+    for i in range(n_batches):
+        k = jax.random.fold_in(key, i)
+        if markov <= 0:
+            toks = jax.random.randint(k, (batch, seq + 1), 0, vocab)
+        else:
+            k0, k1, k2 = jax.random.split(k, 3)
+            start = jax.random.randint(k0, (batch,), 0, vocab)
+            noise = jax.random.randint(k1, (batch, seq), 0, vocab)
+            use_noise = jax.random.uniform(k2, (batch, seq)) > markov
+
+            def step(prev, inp):
+                nz, un = inp
+                nxt = jnp.where(un, nz, perm[prev])
+                return nxt, nxt
+
+            _, rest = jax.lax.scan(
+                step, start, (noise.T, use_noise.T))
+            toks = jnp.concatenate([start[:, None], rest.T], axis=1)
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

@@ -1,0 +1,52 @@
+"""Jit'd public wrappers over the Pallas kernels with ref fallbacks.
+
+``impl`` resolution: "pallas" runs the kernel (interpret mode on CPU — this
+container; compiled on TPU), "ref" runs the pure-jnp oracle, "auto" picks
+pallas on TPU and ref on CPU (interpret-mode kernels are Python-slow, so CPU
+production paths use the oracle, which is mathematically identical — the
+kernel tests assert this).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.knn_topk import pairwise_sqdist as _sqdist_pallas
+from repro.kernels.largevis_grad import largevis_grads as _lvgrad_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+def pairwise_sqdist(a, b, *, impl: str = "auto", **kw):
+    if _resolve(impl) == "pallas":
+        return _sqdist_pallas(a, b, interpret=not _on_tpu(), **kw)
+    return ref.pairwise_sqdist_ref(a, b)
+
+
+def largevis_grads(yi, yj, yneg, neg_mask, *, gamma=7.0, a=1.0, clip=5.0,
+                   eps=0.1, impl: str = "auto", **kw):
+    if _resolve(impl) == "pallas":
+        return _lvgrad_pallas(yi, yj, yneg, neg_mask, gamma=gamma, a=a,
+                              clip=clip, eps=eps,
+                              interpret=not _on_tpu(), **kw)
+    return ref.largevis_grads_ref(yi, yj, yneg, gamma=gamma, a=a, clip=clip,
+                                  eps=eps, neg_mask=neg_mask)
+
+
+def flash_attention(q, k, v, *, causal=True, impl: str = "auto", **kw):
+    if _resolve(impl) == "pallas":
+        return _flash_pallas(q, k, v, causal=causal,
+                             interpret=not _on_tpu(), **kw)
+    return ref.flash_attention_ref(q, k, v, causal=causal)

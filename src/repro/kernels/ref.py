@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# knn_topk: blocked pairwise squared distances
+# ---------------------------------------------------------------------------
+
+def pairwise_sqdist_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """a: (M,d), b: (N,d) -> (M,N) squared euclidean distances, f32."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    an = jnp.sum(a * a, axis=-1, keepdims=True)          # (M,1)
+    bn = jnp.sum(b * b, axis=-1, keepdims=True).T        # (1,N)
+    d = an + bn - 2.0 * (a @ b.T)
+    return jnp.maximum(d, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# largevis_grad: fused attractive + repulsive forces (f(x) = 1/(1+a x^2))
+# ---------------------------------------------------------------------------
+
+def largevis_grads_ref(yi, yj, yneg, *, gamma: float = 7.0, a: float = 1.0,
+                       clip: float = 5.0, eps: float = 0.1,
+                       neg_mask=None):
+    """Gradients of the (negated, minimized) edge log-likelihood, Eqn (6).
+
+    yi, yj: (B,s) endpoint embeddings of sampled positive edges.
+    yneg:   (B,M,s) embeddings of sampled negative vertices.
+    neg_mask: (B,M) 1.0 valid / 0.0 skip (collision with i or j).
+
+    Returns (gi, gj, gneg): ascent directions are NEGATED (gradient of the
+    loss to MINIMIZE), per-coordinate clipped to [-clip, clip] like the
+    reference implementation.
+    """
+    f32 = jnp.float32
+    yi, yj, yneg = yi.astype(f32), yj.astype(f32), yneg.astype(f32)
+    # positive edge: d/dyi [-log f] = 2a(yi-yj) / (1 + a d2)
+    dij = yi - yj                                        # (B,s)
+    d2 = jnp.sum(dij * dij, axis=-1, keepdims=True)      # (B,1)
+    gpos = (2.0 * a / (1.0 + a * d2)) * dij
+    # negative: d/dyi [-gamma log(1-f)] = -2 gamma (yi-yn) / ((eps+d2)(1+a d2))
+    din = yi[:, None, :] - yneg                          # (B,M,s)
+    dn2 = jnp.sum(din * din, axis=-1, keepdims=True)     # (B,M,1)
+    gneg_i = -2.0 * gamma * din / ((eps + dn2) * (1.0 + a * dn2))
+    if neg_mask is not None:
+        gneg_i = gneg_i * neg_mask[..., None]
+    c = clip
+    gi = jnp.clip(gpos + jnp.sum(gneg_i, axis=1), -c, c)
+    gj = jnp.clip(-gpos, -c, c)
+    gneg = jnp.clip(-gneg_i, -c, c)
+    return gi, gj, gneg
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q: (B,S,H,hd); k/v: (B,T,H,hd) (heads pre-broadcast).  f32 softmax."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

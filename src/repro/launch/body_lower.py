@@ -1,0 +1,212 @@
+"""Single-body lowerings for trip-count cost correction (§Roofline).
+
+``cost_analysis`` counts a scan body once, so the full-program numbers
+undercount by the trip count.  Per cell we additionally lower:
+
+  * train:   (a) one-microbatch value_and_grad  (the microbatch scan body)
+             (b) one layer-period fwd+bwd       (the layer scan body)
+  * prefill / decode: one layer-period step
+  * enc-dec: one encoder layer + one decoder layer
+
+under the SAME mesh/shardings as the full program, and reconstruct:
+
+  total = full_raw
+        + (n_micro - 1) * micro_raw
+        + n_micro * [(n_periods - 1) * body_raw + n_periods * inner_corr]
+
+(n_micro = 1 outside training; inner_corr = CostBook corrections for
+sequence-level scans inside one period).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import input_specs
+from repro.models import costbook, make_model, param_specs
+from repro.runtime import sharding as sh
+
+
+def _period_param_specs(cfg, *, inference=False):
+    full = param_specs(cfg, inference=inference)
+    blocks = full["blocks"] if "blocks" in full else None
+    if blocks is None:
+        return None
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), blocks)
+
+
+def _period_param_shardings(specs, mesh, *, train):
+    def one(path, leaf):
+        return NamedSharding(mesh, sh.param_pspec(path, leaf, mesh,
+                                                  train=train,
+                                                  stacked=False))
+    return jax.tree_util.tree_map_with_path(one, specs)
+
+
+def _x_spec(cfg, mesh, batch, seq, *, batch_first):
+    dp = sh.dp_axes(mesh)
+    spec = sh._guard(mesh, (batch, seq, cfg.d_model),
+                     [dp if batch_first else None, None, None])
+    return (jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cfg.dtype),
+            NamedSharding(mesh, spec))
+
+
+def lower_period_body(cfg, mesh, shape_cfg):
+    """Lower one layer-period under production shardings.
+    Returns dict of lowered objects keyed by body name."""
+    from repro.models import lm as LM
+
+    kind = shape_cfg.kind
+    train = kind == "train"
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    dp_size = 1
+    for a in sh.dp_axes(mesh):
+        dp_size *= mesh.shape[a]
+    batch_first = B % dp_size == 0 and B >= dp_size
+    out = {}
+
+    if cfg.is_encoder_decoder:
+        return _lower_encdec_bodies(cfg, mesh, shape_cfg, batch_first)
+
+    pp_specs = _period_param_specs(cfg, inference=not train)
+    pp_shard = _period_param_shardings(pp_specs, mesh, train=train)
+
+    if kind == "train":
+        from repro.launch.steps import pick_microbatches
+        n_micro = pick_microbatches(mesh, shape_cfg)
+        b_micro = B // n_micro
+        x_specs, x_shard = _x_spec(cfg, mesh, b_micro, S,
+                                   batch_first=batch_first)
+
+        def body(pp, x):
+            with sh.activation_policy(mesh, global_batch=b_micro,
+                                      train=True):
+                def f(pp, x):
+                    y, _, aux = LM.apply_period(cfg, pp, x, mode="fwd",
+                                                positions=jnp.arange(S))
+                    return jnp.sum(y.astype(jnp.float32)) + aux
+                return jax.grad(jax.checkpoint(f), argnums=(0, 1))(pp, x)
+
+        out["period"] = (body, (pp_specs, x_specs), (pp_shard, x_shard),
+                         dict(n_micro=n_micro, b_micro=b_micro))
+
+        # one-microbatch loss+grad (micro scan body)
+        model = make_model(cfg)
+        full_p = param_specs(cfg)
+        p_shard = sh.params_shardings(full_p, mesh, train=True)
+        mb_specs = {
+            "tokens": jax.ShapeDtypeStruct((b_micro, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b_micro, S), jnp.int32)}
+        mb_shard = sh.batch_shardings(mb_specs, mesh, global_batch=b_micro)
+
+        def micro(params, batch):
+            with sh.activation_policy(mesh, global_batch=b_micro,
+                                      train=True):
+                return jax.value_and_grad(model["loss"])(params, batch)
+
+        out["micro"] = (micro, (full_p, mb_specs), (p_shard, mb_shard),
+                        dict())
+        return out
+
+    if kind == "prefill":
+        x_specs, x_shard = _x_spec(cfg, mesh, B, S, batch_first=batch_first)
+
+        def body(pp, x):
+            with sh.activation_policy(mesh, global_batch=B):
+                y, cache, _ = LM.apply_period(cfg, pp, x, mode="prefill",
+                                              positions=jnp.arange(S))
+                return y, cache
+
+        out["period"] = (body, (pp_specs, x_specs), (pp_shard, x_shard),
+                         dict(n_micro=1))
+        return out
+
+    # decode
+    from repro.configs import kv_cache_specs
+    from repro.models.attention import kv_tp_repeat
+    kv_rep = kv_tp_repeat(cfg, mesh.shape["model"])
+    cache_full = kv_cache_specs(cfg, B, S, kv_repeat=kv_rep)
+    cache_slice = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), cache_full)
+
+    def cache_shard(path, leaf):
+        s = sh._path_str(path)
+        spec = sh._cache_pspec("cache/" + s, (1,) + leaf.shape, mesh,
+                               batch_first)
+        return NamedSharding(mesh, P(*spec[1:]))
+
+    c_shard = jax.tree_util.tree_map_with_path(cache_shard, cache_slice)
+    x_specs, x_shard = _x_spec(cfg, mesh, B, 1, batch_first=batch_first)
+    pos_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos_shard = NamedSharding(mesh, sh._guard(
+        mesh, (B,), [sh.dp_axes(mesh) if batch_first else None]))
+
+    def body(pp, x, cache, position):
+        with sh.activation_policy(mesh, global_batch=B):
+            y, new_cache, _ = LM.apply_period(cfg, pp, x, mode="decode",
+                                              cache=cache,
+                                              position=position)
+            return y, new_cache
+
+    out["period"] = (body, (pp_specs, x_specs, cache_slice, pos_spec),
+                     (pp_shard, x_shard, c_shard, pos_shard),
+                     dict(n_micro=1))
+    return out
+
+
+def _lower_encdec_bodies(cfg, mesh, shape_cfg, batch_first):
+    """whisper: one decoder layer (+ encoder layer for train/prefill)."""
+    from repro.models import encdec as ED
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    train = shape_cfg.kind == "train"
+    out = {}
+    dec_specs = jax.eval_shape(
+        lambda k: ED.init_dec_layer(k, cfg), jax.random.key(0))
+    dec_shard = _period_param_shardings(dec_specs, mesh, train=train)
+    sq = S if shape_cfg.kind != "decode" else 1
+    x_specs, x_shard = _x_spec(cfg, mesh, B, sq, batch_first=batch_first)
+    enc_specs, enc_shard = _x_spec(cfg, mesh, B, cfg.enc_positions,
+                                   batch_first=batch_first)
+
+    if shape_cfg.kind == "decode":
+        from repro.configs import kv_cache_specs
+        cache_full = kv_cache_specs(cfg, B, S)["self"]
+        cache_slice = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), cache_full)
+        c_shard = jax.tree.map(
+            lambda s: NamedSharding(mesh, sh._guard(
+                mesh, s.shape,
+                [sh.dp_axes(mesh) if batch_first else None]
+                + [None] * (len(s.shape) - 1))), cache_slice)
+        pos_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+        pos_shard = NamedSharding(mesh, sh._guard(
+            mesh, (B,), [sh.dp_axes(mesh) if batch_first else None]))
+
+        def body(lp, x, enc, cache, position):
+            with sh.activation_policy(mesh, global_batch=B):
+                return ED._dec_layer(cfg, lp, x, enc, mode="decode",
+                                     cache=cache, position=position)
+
+        out["period"] = (body, (dec_specs, x_specs, enc_specs, cache_slice,
+                                pos_spec),
+                         (dec_shard, x_shard, enc_shard, c_shard, pos_shard),
+                         dict(n_micro=1))
+        return out
+
+    def body(lp, x, enc):
+        with sh.activation_policy(mesh, global_batch=B, train=train):
+            if train:
+                def f(lp, x):
+                    y, _ = ED._dec_layer(cfg, lp, x, enc, mode="fwd",
+                                         positions=jnp.arange(sq))
+                    return jnp.sum(y.astype(jnp.float32))
+                return jax.grad(f, argnums=(0, 1))(lp, x)
+            y, c = ED._dec_layer(cfg, lp, x, enc, mode="prefill",
+                                 positions=jnp.arange(sq))
+            return y, c
+
+    out["period"] = (body, (dec_specs, x_specs, enc_specs),
+                     (dec_shard, x_shard, enc_shard), dict(n_micro=1))
+    return out

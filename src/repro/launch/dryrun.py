@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax-importing import: jax locks device count on init.
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * 512 placeholder CPU devices back the production meshes
+    (16x16 single-pod, 2x16x16 multi-pod);
+  * every applicable (architecture x input shape) cell lowers and compiles
+    with its production in/out shardings;
+  * memory_analysis() (fits-per-device) and cost_analysis() (FLOPs/bytes)
+    are printed and archived, plus the parsed collective-byte table the
+    roofline consumes (launch/hlo_analysis.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--jobs-file cells.txt]
+  python -m repro.launch.dryrun --arch largevis --shape layout_4m --mesh single
+"""
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "artifacts" / "dryrun"
+
+LARGEVIS_SHAPES = {
+    # paper scale: LiveJournal ~4M nodes, K=150 edges/node
+    "layout_4m": dict(n_nodes=4_000_000, n_edges=600_000_000,
+                      batch=1 << 20),
+    # §Perf hillclimb 3: per-shard sampling + local-SGD (H=8)
+    "layout_4m_local": dict(n_nodes=4_000_000, n_edges=600_000_000,
+                            batch=1 << 20, local=True),
+    "layout_64m": dict(n_nodes=64_000_000, n_edges=9_600_000_000,
+                       batch=1 << 22),
+}
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: pathlib.Path,
+             quiet: bool = False) -> dict:
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import hlo_analysis as H
+    from repro.models import costbook
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+           "devices": int(len(jax.devices())), "status": "ok"}
+    t0 = time.time()
+    try:
+        if arch == "largevis":
+            from repro.launch.steps import (make_largevis_step,
+                                            make_largevis_step_local)
+            spec = dict(LARGEVIS_SHAPES[shape])
+            local = spec.pop("local", False)
+            builder = make_largevis_step_local if local \
+                else make_largevis_step
+            fn, arg_specs, in_sh, out_sh = builder(mesh, **spec)
+            rec["cell_kind"] = "largevis_layout"
+        else:
+            from repro.configs import get_config, SHAPES, cell_applicable
+            from repro.launch.steps import make_step
+            cfg = get_config(arch)
+            shape_cfg = SHAPES[shape]
+            ok, why = cell_applicable(cfg, shape_cfg)
+            if not ok:
+                rec["status"] = "skipped"
+                rec["reason"] = why
+                out_dir.mkdir(parents=True, exist_ok=True)
+                (out_dir / f"{arch}__{shape}__{mesh_kind}.json").write_text(
+                    json.dumps(rec, indent=1))
+                if not quiet:
+                    print(f"SKIP {arch} x {shape} x {mesh_kind}: {why}")
+                return rec
+            if os.environ.get("REPRO_KV_QUANT") and \
+                    shape_cfg.kind == "decode":
+                from repro.launch.steps import make_decode_step
+                fn, arg_specs, in_sh, out_sh = make_decode_step(
+                    cfg, mesh, shape_cfg, kv_quant=True)
+                rec["kv_quant"] = True
+            else:
+                fn, arg_specs, in_sh, out_sh = make_step(cfg, mesh,
+                                                         shape_cfg)
+            rec["cell_kind"] = shape_cfg.kind
+        donate = (0, 1) if rec.get("cell_kind") == "train" else ()
+        if rec.get("cell_kind") == "decode":
+            donate = (1,)                       # cache updated in place
+        if arch == "largevis":
+            donate = (0,)                       # layout table updated in place
+        with mesh:
+            with costbook.recording() as book:
+                lowered = jax.jit(fn, in_shardings=in_sh,
+                                  out_shardings=out_sh,
+                                  donate_argnums=donate).lower(*arg_specs)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        mem = H.memory_stats(compiled)
+        cost = H.cost_stats(compiled)
+        hlo = compiled.as_text()
+        coll = H.collective_bytes(hlo)
+        coll.pop("while_trip_counts", None)
+        if not quiet:
+            print(f"== {arch} x {shape} x {mesh_kind} ==")
+            print("memory_analysis:", json.dumps(mem))
+            print("cost_analysis:", json.dumps(cost))
+            print("collectives:", json.dumps(coll))
+        rec.update(
+            lower_s=round(t_lower - t0, 2),
+            compile_s=round(t_compile - t_lower, 2),
+            memory=mem, cost=cost, collectives=coll,
+            costbook=[dict(label=e.label, total_flops=e.total_flops,
+                           total_bytes=e.total_bytes, trips=e.trips)
+                      for e in book.entries],
+            hlo_ops=hlo.count("\n"),
+        )
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug report
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        if not quiet:
+            print(f"FAILED {arch} x {shape} x {mesh_kind}: {rec['error']}",
+                  file=sys.stderr)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{arch}__{shape}__{mesh_kind}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def run_body_cell(arch: str, shape: str, mesh_kind: str,
+                  out_dir: pathlib.Path, quiet: bool = False) -> dict:
+    """Lower the scan-body functions for the trip-count cost correction."""
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import hlo_analysis as H
+    from repro.launch.body_lower import lower_period_body
+    from repro.models import costbook
+    from repro.configs import get_config, SHAPES, cell_applicable
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "status": "ok",
+           "bodies": {}}
+    t0 = time.time()
+    try:
+        cfg = get_config(arch)
+        shape_cfg = SHAPES[shape]
+        ok, why = cell_applicable(cfg, shape_cfg)
+        if not ok:
+            rec["status"] = "skipped"
+            rec["reason"] = why
+        else:
+            rec["n_periods"] = (cfg.n_layers if cfg.is_encoder_decoder
+                                else cfg.n_periods)
+            bodies = lower_period_body(cfg, mesh, shape_cfg)
+            with mesh:
+                for name, (fn, arg_specs, in_sh, meta) in bodies.items():
+                    with costbook.recording() as book:
+                        lowered = jax.jit(fn, in_shardings=in_sh).lower(
+                            *arg_specs)
+                    compiled = lowered.compile()
+                    hlo = compiled.as_text()
+                    coll = H.collective_bytes(hlo)
+                    coll.pop("while_trip_counts", None)
+                    rec["bodies"][name] = dict(
+                        cost=H.cost_stats(compiled), collectives=coll,
+                        costbook=[dict(label=e.label,
+                                       total_flops=e.total_flops,
+                                       total_bytes=e.total_bytes,
+                                       trips=e.trips)
+                                  for e in book.entries],
+                        **meta)
+            rec["seconds"] = round(time.time() - t0, 1)
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        if not quiet:
+            print(f"BODY FAILED {arch} x {shape}: {rec['error']}",
+                  file=sys.stderr)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{arch}__{shape}__{mesh_kind}__body.json").write_text(
+        json.dumps(rec, indent=1))
+    if not quiet and rec["status"] == "ok":
+        print(f"body ok {arch} x {shape} x {mesh_kind} "
+              f"({rec.get('seconds', 0)}s)")
+    return rec
+
+
+def all_cells(mesh_kinds):
+    from repro.configs import ARCH_NAMES, SHAPES
+    cells = []
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            for mk in mesh_kinds:
+                cells.append((arch, shape, mk))
+    for shape in ("layout_4m",):
+        for mk in mesh_kinds:
+            cells.append(("largevis", shape, mk))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--mode", default="full", choices=["full", "body"])
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    mesh_kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if not args.all:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mk in mesh_kinds:
+            if args.mode == "body":
+                rec = run_body_cell(args.arch, args.shape, mk, out_dir)
+            else:
+                rec = run_cell(args.arch, args.shape, mk, out_dir)
+            if rec["status"] == "error":
+                sys.exit(1)
+        return
+
+    # --all: subprocess per cell (fresh XLA state, bounded memory)
+    cells = all_cells(mesh_kinds)
+    if args.mode == "body":
+        cells = [(a, s, m) for a, s, m in cells
+                 if a != "largevis" and m == "single"]
+    results = []
+    for arch, shape, mk in cells:
+        suffix = "__body" if args.mode == "body" else ""
+        path = out_dir / f"{arch}__{shape}__{mk}{suffix}.json"
+        if path.exists() and not args.force:
+            rec = json.loads(path.read_text())
+            results.append(rec)
+            print(f"cached {arch} x {shape} x {mk}: {rec['status']}")
+            continue
+        t0 = time.time()
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--mesh", mk, "--out", str(out_dir),
+             "--mode", args.mode],
+            capture_output=True, text=True, timeout=3600)
+        if path.exists():
+            rec = json.loads(path.read_text())
+        else:
+            rec = {"arch": arch, "shape": shape, "mesh": mk,
+                   "status": "crash", "error": proc.stderr[-2000:]}
+            out_dir.mkdir(parents=True, exist_ok=True)
+            path.write_text(json.dumps(rec, indent=1))
+        results.append(rec)
+        print(f"{arch:18s} {shape:12s} {mk:6s} -> {rec['status']:8s}"
+              f" ({time.time()-t0:.0f}s)")
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_bad = len(results) - n_ok - n_skip
+    print(f"\n{n_ok} ok / {n_skip} skipped / {n_bad} FAILED "
+          f"of {len(results)} cells")
+    sys.exit(1 if n_bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""HLO post-processing for the roofline: collective bytes + cost extraction.
+
+``cost_analysis()`` has no collective accounting, so collective traffic is
+parsed from the (optimized, SPMD-partitioned) HLO text: every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute contributes
+its largest-operand byte size.  Ops inside ``while`` bodies are multiplied
+by the loop trip count when XLA annotates it (known_trip_count) — our layer
+stacks are scans, so this matters.
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of 'f32[128,256]{...}' -> 131072; tuples summed."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _computation_blocks(hlo: str):
+    """Split HLO text into (name, body) computation blocks."""
+    blocks = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(%?[\w\.\-]+)\s*(\([^)]*\))?\s*->.*{$", stripped)
+        if (stripped.startswith("ENTRY") or m) and stripped.endswith("{"):
+            if cur_name is not None:
+                blocks[cur_name] = cur_lines
+            name = stripped.split()[0].lstrip("%")
+            if stripped.startswith("ENTRY"):
+                name = stripped.split()[1].lstrip("%")
+            cur_name, cur_lines = name, []
+        elif stripped == "}" and cur_name is not None:
+            blocks[cur_name] = cur_lines
+            cur_name, cur_lines = None, []
+        elif cur_name is not None:
+            cur_lines.append(stripped)
+    if cur_name is not None:
+        blocks[cur_name] = cur_lines
+    return blocks
+
+
+def _trip_counts(hlo: str, blocks) -> dict:
+    """body-computation name -> known trip count (1 if unknown)."""
+    trips = {}
+    for line in hlo.splitlines():
+        if " while(" in line or " = while(" in line or "while(" in line:
+            if "body=" not in line:
+                continue
+            bm = re.search(r"body=%?([\w\.\-]+)", line)
+            tm = re.search(r'known_trip_count=\{?"?n"?[:=]"?(\d+)', line)
+            if not tm:
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+            if bm:
+                trips[bm.group(1)] = int(tm.group(1)) if tm else 1
+    return trips
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Sum collective operand bytes, trip-count aware.
+
+    Returns {op_name: bytes, ..., 'total': bytes}.
+    """
+    blocks = _computation_blocks(hlo)
+    trips = _trip_counts(hlo, blocks)
+    out = {op: 0 for op in COLLECTIVE_OPS}
+
+    def block_mult(name: str) -> int:
+        return trips.get(name, 1)
+
+    for name, lines in blocks.items():
+        mult = block_mult(name)
+        for line in lines:
+            for op in COLLECTIVE_OPS:
+                # match "= f32[...] all-gather(" etc.
+                m = re.search(rf"=\s*([^=]*?)\s{re.escape(op)}(-start|-done)?\(",
+                              line)
+                if m and f" {op}" in line:
+                    if m.group(2) == "-done":
+                        continue        # counted at -start
+                    out[op] += _shape_bytes(m.group(1)) * mult
+                    break
+    out["total"] = sum(out[o] for o in COLLECTIVE_OPS)
+    out["while_trip_counts"] = trips
+    return out
+
+
+def memory_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        out[k] = int(getattr(ma, k, 0) or 0)
+    return out
+
+
+def cost_stats(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}

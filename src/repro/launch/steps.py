@@ -1,0 +1,276 @@
+"""Step builders: sharded train / prefill / decode steps per (arch, shape).
+
+Each builder returns (fn, in_shardings, out_shardings, arg_specs) ready for
+``jax.jit(fn, in_shardings=..., out_shardings=...).lower(*arg_specs)`` —
+the dry-run compiles exactly what the production launcher runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import input_specs
+from repro.models import make_model, param_specs
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.runtime import sharding as sh
+
+
+def _out_tree_shardings(out_specs, mesh, *, global_batch: int):
+    """Rule-based shardings for a (logits, cache)-style output pytree."""
+    dp = sh.dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    batch_first = global_batch % dp_size == 0 and global_batch >= dp_size
+
+    def one(path, leaf):
+        s = sh._path_str(path)
+        shape = leaf.shape
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if leaf.ndim == 2 and shape[-1] > 1024:          # logits (B, V)
+            spec = [dp if batch_first else None, "model"]
+            return NamedSharding(mesh, sh._guard(mesh, shape, spec))
+        if s.endswith("encoder_out") or s.endswith("_scale") or any(
+                s.endswith(t) for t in ("/k", "/v", "/ssm", "/conv", "/C",
+                                        "/n", "/m", "/c", "/h")):
+            return NamedSharding(
+                mesh, sh._cache_pspec(s, shape, mesh, batch_first))
+        spec = [dp if batch_first and shape[0] == global_batch else None]
+        spec += [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, sh._guard(mesh, shape, spec))
+
+    return jax.tree_util.tree_map_with_path(one, out_specs)
+
+
+def pick_microbatches(mesh, shape_cfg, *, tokens_budget: int = 8192) -> int:
+    """Largest divisor of the per-device batch that brings per-microbatch
+    tokens/device under budget (activation memory = one microbatch slice;
+    grads accumulate in f32 across microbatches)."""
+    dp_size = 1
+    for a in sh.dp_axes(mesh):
+        dp_size *= mesh.shape[a]
+    per_dev_batch = max(1, shape_cfg.global_batch // dp_size)
+    per_dev_tokens = per_dev_batch * shape_cfg.seq_len
+    target = max(1, per_dev_tokens // tokens_budget)
+    n = 1
+    for cand in range(1, per_dev_batch + 1):
+        if per_dev_batch % cand == 0 and cand <= target:
+            n = cand
+    return n
+
+
+def make_train_step(cfg, mesh, shape_cfg, *, opt_cfg: AdamWConfig = None,
+                    microbatches: int = 0):
+    """Returns (train_step, arg_specs, in_shardings, out_shardings).
+
+    Gradient accumulation over microbatches bounds activation memory: the
+    assigned train shape (1M tokens/step global) is far beyond one
+    microbatch per 16 GB chip.
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    model = make_model(cfg)
+    n_micro = microbatches or pick_microbatches(mesh, shape_cfg)
+
+    def train_step(params, opt_state, batch):
+        with sh.activation_policy(mesh, global_batch=shape_cfg.global_batch,
+                                  train=True):
+            if n_micro == 1:
+                loss, grads = jax.value_and_grad(model["loss"])(params,
+                                                                batch)
+            else:
+                mb = jax.tree.map(
+                    lambda a: sh.constrain_dim(
+                        a.reshape((n_micro, a.shape[0] // n_micro)
+                                  + a.shape[1:]), 1), batch)
+
+                def micro_fn(carry, one):
+                    gacc, lacc = carry
+                    l, g = jax.value_and_grad(model["loss"])(params, one)
+                    gacc = jax.tree.map(
+                        lambda acc, gi: acc + gi.astype(jnp.float32),
+                        gacc, g)
+                    return (gacc, lacc + l), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum), _ = jax.lax.scan(
+                    micro_fn, (g0, jnp.zeros((), jnp.float32)), mb)
+                grads = jax.tree.map(lambda g: g / n_micro, gsum)
+                loss = lsum / n_micro
+            params, opt_state, stats = adamw_update(opt_cfg, params, grads,
+                                                    opt_state)
+        return params, opt_state, loss
+
+    p_specs = param_specs(cfg)
+    o_specs = jax.eval_shape(adamw_init, p_specs)
+    b_specs = input_specs(cfg, shape_cfg)
+
+    p_shard = sh.params_shardings(p_specs, mesh, train=True)
+    o_shard = {"m": sh.params_shardings(p_specs, mesh, train=True),
+               "v": sh.params_shardings(p_specs, mesh, train=True),
+               "step": NamedSharding(mesh, P())}
+    b_shard = sh.batch_shardings(b_specs, mesh,
+                                 global_batch=shape_cfg.global_batch)
+    in_sh = (p_shard, o_shard, b_shard)
+    out_sh = (p_shard, o_shard, NamedSharding(mesh, P()))
+    return train_step, (p_specs, o_specs, b_specs), in_sh, out_sh
+
+
+def make_prefill_step(cfg, mesh, shape_cfg):
+    from repro.models.attention import kv_tp_repeat
+    kv_rep = kv_tp_repeat(cfg, mesh.shape["model"])
+    model = make_model(cfg, kv_repeat=kv_rep)
+
+    def prefill_step(params, batch):
+        with sh.activation_policy(mesh, global_batch=shape_cfg.global_batch):
+            return model["prefill"](params, batch)
+
+    p_specs = param_specs(cfg, inference=True)
+    b_specs = input_specs(cfg, shape_cfg)
+    p_shard = sh.params_shardings(p_specs, mesh, train=False)
+    b_shard = sh.batch_shardings(b_specs, mesh,
+                                 global_batch=shape_cfg.global_batch)
+    out_specs = jax.eval_shape(prefill_step, p_specs, b_specs)
+    out_sh = _out_tree_shardings(out_specs, mesh,
+                                 global_batch=shape_cfg.global_batch)
+    return prefill_step, (p_specs, b_specs), (p_shard, b_shard), out_sh
+
+
+def make_decode_step(cfg, mesh, shape_cfg, *, kv_quant: bool = False):
+    from repro.models.attention import kv_tp_repeat
+    kv_rep = kv_tp_repeat(cfg, mesh.shape["model"])
+    model = make_model(cfg, kv_repeat=kv_rep, kv_quant=kv_quant)
+
+    def decode_step(params, batch):
+        with sh.activation_policy(mesh, global_batch=shape_cfg.global_batch):
+            return model["decode"](params, batch)
+
+    p_specs = param_specs(cfg, inference=True)
+    b_specs = input_specs(cfg, shape_cfg, kv_repeat=kv_rep,
+                          kv_quant=kv_quant)
+    p_shard = sh.params_shardings(p_specs, mesh, train=False)
+    b_shard = sh.batch_shardings(b_specs, mesh,
+                                 global_batch=shape_cfg.global_batch)
+    out_specs = jax.eval_shape(decode_step, p_specs, b_specs)
+    out_sh = _out_tree_shardings(out_specs, mesh,
+                                 global_batch=shape_cfg.global_batch)
+    return decode_step, (p_specs, b_specs), (p_shard, b_shard), out_sh
+
+
+def make_step(cfg, mesh, shape_cfg):
+    if shape_cfg.kind == "train":
+        return make_train_step(cfg, mesh, shape_cfg)
+    if shape_cfg.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape_cfg)
+    return make_decode_step(cfg, mesh, shape_cfg)
+
+
+# ---------------------------------------------------------------------------
+# LargeVis layout step — the paper technique's own production cell
+# ---------------------------------------------------------------------------
+
+def make_largevis_step_local(mesh, *, n_nodes: int, n_edges: int,
+                             batch: int, out_dim: int = 2,
+                             n_negatives: int = 5, sync_every: int = 8):
+    """§Perf hillclimb 3: per-shard edge sampling + local-SGD sync.
+
+    The v1 step shards the edge alias tables over DP and lets every device
+    draw global indices — XLA materializes cross-shard table gathers (~2 GB
+    per step).  The reference LargeVis gives each Hogwild thread its OWN
+    sampling range, so the faithful distributed form is: each device holds
+    a local alias table over its edge shard, samples locally (stratified
+    sampling, proportional allocation), applies ``sync_every`` local update
+    steps, and replicas merge with one delta-psum — the local-SGD analogue
+    of the paper's async SGD (DESIGN.md §2).
+    """
+    from repro.core.layout import layout_step
+
+    dp = sh.dp_axes(mesh)
+    n_shards = 1
+    for a in dp:
+        n_shards *= mesh.shape[a]
+    b_loc = max(1, batch // n_shards)
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    def step(y, seed, t_frac, edge_src, edge_dst, edge_thr, edge_alias,
+             neg_thr, neg_alias):
+        def body(y, seed, t_frac, esrc, edst, ethr, eali, nthr, nali):
+            dev = jax.lax.axis_index(dp[-1])
+            if len(dp) > 1:
+                dev = dev + mesh.shape[dp[-1]] * jax.lax.axis_index(dp[0])
+            y0 = y
+
+            def one(i, y):
+                key = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.key(seed[0]), dev), i)
+                return layout_step(
+                    y, key, t_frac, edge_src=esrc, edge_dst=edst,
+                    edge_thr=ethr, edge_alias=eali, neg_thr=nthr,
+                    neg_alias=nali, n_negatives=n_negatives,
+                    n_nodes=n_nodes, batch=b_loc)
+
+            y = jax.lax.fori_loop(0, sync_every, one, y)
+            # merge replicas: average the deltas (one psum per H steps)
+            return y0 + jax.lax.pmean(y - y0, dp)
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(), P(), P(dp), P(dp), P(dp), P(dp),
+                      P(), P()),
+            out_specs=P(), check_vma=False,
+        )(y, seed, t_frac, edge_src, edge_dst, edge_thr, edge_alias,
+          neg_thr, neg_alias)
+
+    rep = NamedSharding(mesh, P())
+    table = NamedSharding(mesh, sh._guard(mesh, (n_edges,), [dp]))
+    arg_specs = (sds((n_nodes, out_dim), f32), sds((1,), i32), sds((), f32),
+                 sds((n_edges,), i32), sds((n_edges,), i32),
+                 sds((n_edges,), f32), sds((n_edges,), i32),
+                 sds((n_nodes,), f32), sds((n_nodes,), i32))
+    in_sh = (rep, rep, rep, table, table, table, table, rep, rep)
+    return step, arg_specs, in_sh, rep
+
+
+def make_largevis_step(mesh, *, n_nodes: int, n_edges: int, batch: int,
+                       out_dim: int = 2, n_negatives: int = 5):
+    """Sharded layout step: edge batch over DP axes, embedding table
+    replicated below 10M nodes (N x 2 f32 is tiny), grads combined by
+    scatter-add.  Returns the same 4-tuple as the LM builders."""
+    from repro.core.layout import layout_step
+
+    dp = sh.dp_axes(mesh)
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    args = {
+        "y": sds((n_nodes, out_dim), f32),
+        "edge_src": sds((n_edges,), i32),
+        "edge_dst": sds((n_edges,), i32),
+        "edge_thr": sds((n_edges,), f32),
+        "edge_alias": sds((n_edges,), i32),
+        "neg_thr": sds((n_nodes,), f32),
+        "neg_alias": sds((n_nodes,), i32),
+    }
+
+    def step(y, seed, t_frac, edge_src, edge_dst, edge_thr, edge_alias,
+             neg_thr, neg_alias):
+        key = jax.random.key(seed[0])
+        return layout_step(
+            y, key, t_frac, edge_src=edge_src, edge_dst=edge_dst,
+            edge_thr=edge_thr, edge_alias=edge_alias, neg_thr=neg_thr,
+            neg_alias=neg_alias, n_negatives=n_negatives, n_nodes=n_nodes,
+            batch=batch)
+
+    rep = NamedSharding(mesh, P())
+    table = NamedSharding(mesh, sh._guard(mesh, (n_edges,), [dp]))
+    node_t = NamedSharding(mesh, sh._guard(mesh, (n_nodes,), [dp]))
+    arg_specs = (args["y"], sds((1,), i32), sds((), f32), args["edge_src"],
+                 args["edge_dst"], args["edge_thr"], args["edge_alias"],
+                 args["neg_thr"], args["neg_alias"])
+    in_sh = (rep, rep, rep, table, table, table, table, node_t, node_t)
+    out_sh = rep
+    return step, arg_specs, in_sh, out_sh

@@ -1,0 +1,98 @@
+"""Production training driver: --arch <id> --steps N [--resume].
+
+Wires: model factory -> sharded train step -> checkpoint manager (atomic,
+rotating, auto-resume) -> preemption guard -> straggler watchdog.  On this
+container it runs reduced configs on the host mesh; on a pod the same
+driver runs the full config on make_production_mesh().
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeConfig
+from repro.data.synthetic import token_stream
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.models import make_model
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.runtime.fault_tolerance import PreemptionGuard, Watchdog
+
+
+def train(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
+          ckpt_dir: str = "/tmp/repro_ckpt", save_every: int = 20,
+          resume: bool = True, reduced: bool = True, production: bool = False,
+          seed: int = 0, log_every: int = 10, microbatches: int = 1):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = make_production_mesh() if production else make_host_mesh()
+    shape_cfg = ShapeConfig("custom", "train", seq, batch)
+    step_fn, _, in_sh, out_sh = make_train_step(
+        cfg, mesh, shape_cfg, microbatches=microbatches)
+    jstep = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                    donate_argnums=(0, 1))
+
+    model = make_model(cfg)
+    mgr = CheckpointManager(ckpt_dir, save_every=save_every)
+    state, start = (mgr.resume() if resume else (None, 0))
+    if state is None:
+        params = model["init"](jax.random.key(seed))
+        opt_state = adamw_init(params)
+        start = 0
+    else:
+        params, opt_state = state["params"], state["opt"]
+    guard = PreemptionGuard(lambda: mgr.save_now(
+        -1, {"params": params, "opt": opt_state}))
+    dog = Watchdog()
+
+    losses = []
+    data = token_stream(jax.random.key(seed + 1), steps, batch, seq,
+                        cfg.vocab_size)
+    for step, batch_data in enumerate(data):
+        if step < start:          # deterministic data skip on resume
+            continue
+        t0 = time.time()
+        params, opt_state, loss = jstep(params, opt_state, batch_data)
+        loss = float(loss)
+        losses.append((step, loss))
+        dt = time.time() - t0
+        dog.observe(step, dt)
+        if step % log_every == 0:
+            print(f"step {step:5d} loss {loss:.4f} ({dt*1000:.0f} ms)")
+        mgr.maybe_save(step + 1, {"params": params, "opt": opt_state})
+        if guard.triggered:
+            print("preemption: checkpointed and exiting")
+            break
+    guard.restore_handlers()
+    if dog.stragglers:
+        print(f"stragglers flagged: {len(dog.stragglers)}")
+    return params, opt_state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=20)
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+    train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+          ckpt_dir=args.ckpt_dir, save_every=args.save_every,
+          resume=not args.no_resume, reduced=not args.full_config,
+          production=args.production_mesh)
+
+
+if __name__ == "__main__":
+    main()

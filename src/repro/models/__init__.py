@@ -1,0 +1,1 @@
+from repro.models.factory import make_model, param_specs, cache_specs  # noqa: F401

@@ -1,0 +1,414 @@
+"""Attention: GQA, RoPE, sliding-window / local:global, QK-norm, KV cache.
+
+Three execution paths:
+  * ``full``     — one einsum + masked softmax (small S; also encoders).
+  * ``chunked``  — flash-attention algorithm in pure lax.scan (nested q/kv
+                   blocks, running max/denominator).  Bounded memory for 32k
+                   prefill; registers CostBook corrections for the scanned
+                   FLOPs (cost_analysis counts scan bodies once).
+  * ``decode``   — single new token vs a filled cache (global: full-length
+                   cache indexed by position; local: ring buffer of the
+                   sliding window).
+
+The Pallas flash kernel (kernels/flash_attention.py) is a drop-in for the
+chunked path on real TPUs; the dry-run lowers the XLA paths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import costbook
+from repro.models.layers import apply_rope, dense_init, init_rmsnorm, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg) -> dict:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.n_heads, hd)),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads, hd)),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads, hd)),
+        "wo": dense_init(ks[3], (cfg.n_heads, hd, cfg.d_model),
+                         scale=1.0 / np.sqrt(cfg.n_heads * hd)),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["qnorm"] = init_rmsnorm(hd)
+        p["knorm"] = init_rmsnorm(hd)
+    return p
+
+
+def _project_qkv(params: dict, x: jax.Array, cfg, positions, theta: float):
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    if cfg.attn_bias:
+        q = q + params["bq"].astype(dtype)
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(params["qnorm"], q, cfg.norm_eps)
+        k = rmsnorm(params["knorm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def _theta_for(cfg, kind: str) -> float:
+    # gemma3: local layers use the short-range 10k base, globals the long base
+    if kind == "local" and cfg.rope_theta > 10_000.0 and \
+            len(set(cfg.block_pattern)) > 1:
+        return 10_000.0
+    return cfg.rope_theta
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int) -> jax.Array:
+    """(q, k) additive bias; window>0 limits lookback (sliding window)."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= dk <= dq
+    if window > 0:
+        ok &= dk > dq - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Core attention (full / chunked)
+# ---------------------------------------------------------------------------
+
+def _gqa_scores_flops(B, Sq, Sk, H, hd):
+    return 4.0 * B * H * Sq * Sk * hd  # qk^T + pv
+
+
+def mha_full(q, k, v, q_pos, k_pos, *, causal=True, window=0):
+    """q: (B,Sq,H,hd); k/v: (B,Sk,KVH,hd). Returns (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = s / np.sqrt(hd) + _mask_bias(q_pos, k_pos, causal, window)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(B, Sq, H, hd)
+
+
+def _chunk_fwd(q, k, v, q_pos, k_pos, causal, window, q_block, kv_block):
+    """Forward streaming pass.  Returns (out (B,Sq,H,hd), lse (B,KVH,G,Sq))."""
+    B, Sq, H, hd = q.shape
+    KVH, Sk = k.shape[2], k.shape[1]
+    G = H // KVH
+    nq, nk = Sq // q_block, Sk // kv_block
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, nq, q_block, KVH, G, hd)
+    qp = q_pos.reshape(nq, q_block)
+    kb = k.reshape(B, nk, kv_block, KVH, hd).swapaxes(0, 1)
+    vb = v.reshape(B, nk, kv_block, KVH, hd).swapaxes(0, 1)
+    kp = k_pos.reshape(nk, kv_block)
+
+    def q_step(_, qi):
+        qblk, qpos = qi
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kpos = ki
+            s = jnp.einsum("bqhgk,bnhk->bhgqn", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + _mask_bias(qpos, kpos, causal, window)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqn,bnhk->bhgqk", p.astype(qblk.dtype), vblk)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KVH, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kp))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None])
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out.transpose(0, 3, 1, 2, 4), lse)
+
+    _, (out, lse) = jax.lax.scan(q_step, None, (qg.swapaxes(0, 1), qp))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd).astype(q.dtype)
+    lse = lse.transpose(1, 2, 3, 0, 4).reshape(B, KVH, G, Sq)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _mha_chunked_core(q, k, v, q_pos, k_pos, causal, window, q_block,
+                      kv_block):
+    out, _ = _chunk_fwd(q, k, v, q_pos, k_pos, causal, window, q_block,
+                        kv_block)
+    return out
+
+
+def _mha_fwd_rule(q, k, v, q_pos, k_pos, causal, window, q_block, kv_block):
+    out, lse = _chunk_fwd(q, k, v, q_pos, k_pos, causal, window, q_block,
+                          kv_block)
+    return out, (q, k, v, q_pos, k_pos, out, lse)
+
+
+def _mha_bwd_rule(causal, window, q_block, kv_block, res, dout):
+    """Flash backward: recompute s/p per block pair; O(block^2) live memory.
+
+    delta = rowsum(dout * out); p = exp(s - lse);
+    dv += p^T dout; ds = p * (dout v^T - delta); dq += ds k; dk += ds^T q.
+    """
+    q, k, v, q_pos, k_pos, out, lse = res
+    B, Sq, H, hd = q.shape
+    KVH, Sk = k.shape[2], k.shape[1]
+    G = H // KVH
+    nq, nk = Sq // q_block, Sk // kv_block
+    scale = 1.0 / np.sqrt(hd)
+    f32 = jnp.float32
+
+    qg = q.reshape(B, nq, q_block, KVH, G, hd).swapaxes(0, 1)
+    og = out.reshape(B, nq, q_block, KVH, G, hd).swapaxes(0, 1)
+    dg = dout.reshape(B, nq, q_block, KVH, G, hd).swapaxes(0, 1)
+    lg = lse.reshape(B, KVH, G, nq, q_block).transpose(3, 0, 1, 2, 4)
+    qp = q_pos.reshape(nq, q_block)
+    kb = k.reshape(B, nk, kv_block, KVH, hd).swapaxes(0, 1)
+    vb = v.reshape(B, nk, kv_block, KVH, hd).swapaxes(0, 1)
+    kp = k_pos.reshape(nk, kv_block)
+
+    def q_step(carry, qi):
+        dk_acc, dv_acc = carry
+        qblk, oblk, doblk, lseb, qpos = qi
+        delta = jnp.sum(doblk.astype(f32) * oblk.astype(f32), axis=-1)
+        delta = delta.transpose(0, 2, 3, 1)            # (B,KVH,G,qb)
+
+        def kv_step(carry2, ki):
+            dq_acc, dk_a, dv_a = carry2
+            kblk, vblk, kpos, j = ki
+            s = jnp.einsum("bqhgk,bnhk->bhgqn", qblk, kblk,
+                           preferred_element_type=f32) * scale
+            s = s + _mask_bias(qpos, kpos, causal, window)
+            p = jnp.exp(s - lseb[..., None])           # (B,KVH,G,qb,kb)
+            dov = jnp.einsum("bqhgk,bnhk->bhgqn", doblk, vblk,
+                             preferred_element_type=f32)
+            ds = p * (dov - delta[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bhgqn,bnhk->bqhgk",
+                                         ds.astype(kblk.dtype), kblk)
+            dk_blk = jnp.einsum("bhgqn,bqhgk->bnhk",
+                                ds.astype(qblk.dtype), qblk)
+            dv_blk = jnp.einsum("bhgqn,bqhgk->bnhk",
+                                p.astype(doblk.dtype), doblk)
+            dk_a = dk_a.at[j].add(dk_blk)
+            dv_a = dv_a.at[j].add(dv_blk)
+            return (dq_acc, dk_a, dv_a), None
+
+        dq0 = jnp.zeros((B, q_block, KVH, G, hd), f32)
+        (dq_b, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc),
+            (kb, vb, kp, jnp.arange(nk)))
+        return (dk_acc, dv_acc), dq_b
+
+    dk0 = jnp.zeros((nk, B, kv_block, KVH, hd), f32)
+    dv0 = jnp.zeros((nk, B, kv_block, KVH, hd), f32)
+    (dk_acc, dv_acc), dq = jax.lax.scan(
+        q_step, (dk0, dv0), (qg, og, dg, lg, qp))
+    dq = dq.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd).astype(q.dtype)
+    dk = dk_acc.swapaxes(0, 1).reshape(B, Sk, KVH, hd).astype(k.dtype)
+    dv = dv_acc.swapaxes(0, 1).reshape(B, Sk, KVH, hd).astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+_mha_chunked_core.defvjp(_mha_fwd_rule, _mha_bwd_rule)
+
+
+def mha_chunked(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                q_block=2048, kv_block=1024):
+    """Flash-attention algorithm in lax.scan with a flash-style custom VJP:
+    both passes hold O(q_block x kv_block) live memory (the backward
+    recomputes block scores instead of saving the S^2 attention matrix)."""
+    B, Sq, H, hd = q.shape
+    KVH = k.shape[2]
+    Sk = k.shape[1]
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    assert Sq % q_block == 0 and Sk % kv_block == 0
+    nq, nk = Sq // q_block, Sk // kv_block
+    out = _mha_chunked_core(q, k, v, q_pos, k_pos, causal, window, q_block,
+                            kv_block)
+    costbook.record(
+        "mha_chunked",
+        total_flops=_gqa_scores_flops(B, Sq, Sk, H, hd),
+        total_bytes=float(  # q,k,v read + out write, once each (flash ideal)
+            (q.size + k.size + v.size + out.size) * q.dtype.itemsize),
+        trips=nq * nk)
+    return out
+
+
+def attend(q, k, v, q_pos, k_pos, *, causal=True, window=0, impl="auto"):
+    Sq, Sk = q.shape[1], k.shape[1]
+    if impl == "auto":
+        impl = "chunked" if Sq * Sk > (1 << 22) and Sq >= 2048 else "full"
+    if impl == "full":
+        return mha_full(q, k, v, q_pos, k_pos, causal=causal, window=window)
+    return mha_chunked(q, k, v, q_pos, k_pos, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# Block-level entry points
+# ---------------------------------------------------------------------------
+
+def attention_fwd(params, x, cfg, *, kind="attn", positions=None,
+                  causal=True, impl="auto"):
+    """Training / prefill self-attention.  x: (B,S,d) -> (B,S,d)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    theta = _theta_for(cfg, kind)
+    q, k, v = _project_qkv(params, x, cfg, positions, theta)
+    window = cfg.sliding_window if kind == "local" else 0
+    o = attend(q, k, v, positions, positions, causal=causal,
+               window=window, impl=impl)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+
+
+def kv_tp_repeat(cfg, model_axis: int) -> int:
+    """KV-head replication factor for TP (classic GQA practice): pad KV
+    heads to the model-axis degree when group structure allows, so the
+    decode cache shards cleanly on the head dim (no involuntary cache
+    rematerialization).  1 when not applicable (e.g. phi3's kv=10)."""
+    kvh, h = cfg.n_kv_heads, cfg.n_heads
+    if model_axis % kvh != 0:
+        return 1
+    r = model_axis // kvh
+    if r <= 1 or (kvh * r) > h or h % (kvh * r) != 0:
+        return 1
+    return r
+
+
+def quantize_kv(t):
+    """Per-(token, head) symmetric int8 quantization.  t: (B,T,KVH,hd) ->
+    (int8 values, f32 scales (B,T,KVH,1))."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def attention_prefill(params, x, cfg, *, kind="attn", positions=None,
+                      impl="auto", kv_repeat: int = 1,
+                      kv_quant: bool = False):
+    """Prefill: returns (out, cache_entry) — cache holds roped K and V,
+    with KV heads replicated x kv_repeat for TP-aligned cache sharding and
+    optional int8 storage (halves decode-cache HBM traffic)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    theta = _theta_for(cfg, kind)
+    q, k, v = _project_qkv(params, x, cfg, positions, theta)
+    window = cfg.sliding_window if kind == "local" else 0
+    o = attend(q, k, v, positions, positions, causal=True,
+               window=window, impl=impl)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    if kv_repeat > 1:
+        k = jnp.repeat(k, kv_repeat, axis=2)
+        v = jnp.repeat(v, kv_repeat, axis=2)
+    if kind == "local" and cfg.sliding_window and S >= cfg.sliding_window:
+        W = cfg.sliding_window
+        # ring buffer: slot = pos % W; last W positions end aligned
+        start = S - W
+        shift = start % W
+        k = jnp.roll(k[:, start:], shift, axis=1)
+        v = jnp.roll(v[:, start:], shift, axis=1)
+    if kv_quant:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return out, {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    return out, {"k": k, "v": v}
+
+
+def attention_decode(params, x, cfg, cache, position, *, kind="attn"):
+    """One-token decode.  x: (B,1,d); cache k/v: (B,T,KVH*r,hd);
+    position: (B,) index of the NEW token.  The KV-replication factor r and
+    int8 quantization are inferred from the cache.  Returns
+    (out, new_cache)."""
+    B = x.shape[0]
+    theta = _theta_for(cfg, kind)
+    q, k, v = _project_qkv(params, x, cfg, position[:, None], theta)
+    rep = cache["k"].shape[2] // cfg.n_kv_heads
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    T = cache["k"].shape[1]
+    window = cfg.sliding_window if kind == "local" else 0
+    if window and T == window:
+        slot = position % window
+    else:
+        slot = position
+    bidx = jnp.arange(B)
+    quant = "k_scale" in cache
+    if quant:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        new_cache = {
+            "k": cache["k"].at[bidx, slot].set(kq[:, 0]),
+            "v": cache["v"].at[bidx, slot].set(vq[:, 0]),
+            "k_scale": cache["k_scale"].at[bidx, slot].set(ks[:, 0]),
+            "v_scale": cache["v_scale"].at[bidx, slot].set(vs[:, 0]),
+        }
+        ck = dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
+        cv = dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        ck = cache["k"].at[bidx, slot].set(k[:, 0])
+        cv = cache["v"].at[bidx, slot].set(v[:, 0])
+
+    KVH, hd = ck.shape[2], ck.shape[3]
+    H = q.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, hd)
+    s = jnp.einsum("bhgk,bthk->bhgt", qg, ck,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    # validity: global cache slots <= position; ring: reconstructed pos >= 0
+    tpos = jnp.arange(T)[None, :]                       # (1,T)
+    if window and T == window:
+        recon = position[:, None] - ((position[:, None] - tpos) % window)
+        valid = recon >= 0
+    else:
+        valid = tpos <= position[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhgt,bthk->bhgk", p, cv).reshape(B, 1, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    return out, (new_cache if quant else {"k": ck, "v": cv})
+
+
+def attention_flops(cfg, B, Sq, Sk, *, train: bool) -> float:
+    hd = cfg.resolved_head_dim
+    proj = 2.0 * B * Sq * cfg.d_model * hd * (2 * cfg.n_heads +
+                                              2 * cfg.n_kv_heads)
+    core = _gqa_scores_flops(B, Sq, Sk, cfg.n_heads, hd)
+    total = proj + core
+    return total * (3.0 if train else 1.0)

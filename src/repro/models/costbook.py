@@ -1,0 +1,76 @@
+"""Trip-count cost corrections for scanned regions.
+
+``compiled.cost_analysis()`` counts a ``lax.scan`` body ONCE (verified in
+this container: an 8-step scanned matmul reports 1x matmul FLOPs).  Modules
+wrapping compute in sequence-level scans (chunked attention, SSM chunk scans,
+token-level recurrences) record their *analytic* totals here at trace time so
+the roofline harness can correct the raw HLO numbers:
+
+    corrected = raw + sum(total * (trips - 1) / trips)
+
+Layer-stack scans are handled separately (single-body lowering) in
+``benchmarks/roofline.py``; this book only carries *inner* scans, which by
+construction contain no collectives.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass
+class CostEntry:
+    label: str
+    total_flops: float      # analytic flops for ALL trips of the scanned op
+    total_bytes: float      # analytic HBM bytes for ALL trips
+    trips: int
+
+    @property
+    def flops_correction(self) -> float:
+        return self.total_flops * (self.trips - 1) / max(self.trips, 1)
+
+    @property
+    def bytes_correction(self) -> float:
+        return self.total_bytes * (self.trips - 1) / max(self.trips, 1)
+
+
+class CostBook:
+    def __init__(self):
+        self.entries: list = []
+
+    def add(self, label: str, total_flops: float, total_bytes: float,
+            trips: int) -> None:
+        self.entries.append(CostEntry(label, float(total_flops),
+                                      float(total_bytes), int(trips)))
+
+    @property
+    def flops_correction(self) -> float:
+        return sum(e.flops_correction for e in self.entries)
+
+    @property
+    def bytes_correction(self) -> float:
+        return sum(e.bytes_correction for e in self.entries)
+
+
+@contextlib.contextmanager
+def recording():
+    """Collect inner-scan cost corrections while tracing a step function."""
+    prev = getattr(_STATE, "book", None)
+    book = CostBook()
+    _STATE.book = book
+    try:
+        yield book
+    finally:
+        _STATE.book = prev
+
+
+def record(label: str, total_flops: float, total_bytes: float, trips: int,
+           per_layer_mult: int = 1) -> None:
+    """Called by modules at trace time; no-op when not recording."""
+    book = getattr(_STATE, "book", None)
+    if book is not None and trips > 1:
+        book.add(label, total_flops * per_layer_mult,
+                 total_bytes * per_layer_mult, trips)

@@ -1,0 +1,173 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+The conv frontend is a STUB per the assignment: ``encoder_frames``
+(precomputed (B, F, d) frame embeddings) arrive as an input.  Encoder is
+bidirectional self-attention; decoder interleaves causal self-attention,
+cross-attention to the encoder output, and a GELU MLP.  Learned absolute
+positions (no RoPE).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models.layers import (cross_entropy, dense_init, embed,
+                                 init_embedding, init_layernorm, init_mlp,
+                                 layernorm, mlp, unembed)
+from repro.runtime import sharding as shd
+
+
+def init_cross_attention(key, cfg) -> dict:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.n_heads, hd)),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads, hd)),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads, hd)),
+        "wo": dense_init(ks[3], (cfg.n_heads, hd, cfg.d_model),
+                         scale=1.0 / np.sqrt(cfg.n_heads * hd)),
+    }
+
+
+def cross_attention(params, x, enc_out, cfg):
+    """x: (B,Sq,d) queries; enc_out: (B,F,d)."""
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(dtype))
+    qpos = jnp.arange(q.shape[1])
+    kpos = jnp.arange(k.shape[1])
+    o = attn.mha_full(q, k, v, qpos, kpos, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dtype))
+
+
+def init_enc_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 2)
+    return {"ln1": init_layernorm(cfg.d_model),
+            "attn": attn.init_attention(ks[0], cfg),
+            "ln2": init_layernorm(cfg.d_model),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, "gelu", bias=True)}
+
+
+def init_dec_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 3)
+    return {"ln1": init_layernorm(cfg.d_model),
+            "attn": attn.init_attention(ks[0], cfg),
+            "ln_x": init_layernorm(cfg.d_model),
+            "xattn": init_cross_attention(ks[1], cfg),
+            "ln2": init_layernorm(cfg.d_model),
+            "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, "gelu", bias=True)}
+
+
+def init_encdec(key, cfg) -> dict:
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc_pos": jax.random.normal(ks[2], (cfg.enc_positions, cfg.d_model),
+                                     jnp.float32) * 0.02,
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": init_layernorm(cfg.d_model),
+        "embed": init_embedding(ks[3], cfg.vocab_size, cfg.d_model),
+        "dec_pos": jax.random.normal(ks[4], (cfg.max_position, cfg.d_model),
+                                     jnp.float32) * 0.02,
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(k, cfg))(dec_keys),
+        "dec_norm": init_layernorm(cfg.d_model),
+    }
+
+
+def encode(params, cfg, frames):
+    """frames: (B,F,d) stub conv output -> (B,F,d)."""
+    x = frames + params["enc_pos"].astype(frames.dtype)[None]
+
+    def layer(x, lp):
+        h = layernorm(lp["ln1"], x, cfg.norm_eps)
+        x = x + attn.attention_fwd(lp["attn"], h, cfg, causal=False,
+                                   impl="full")
+        h = layernorm(lp["ln2"], x, cfg.norm_eps)
+        return shd.constrain_batch_major(x + mlp(lp["mlp"], h, "gelu")), None
+
+    x, _ = jax.lax.scan(layer, x, params["enc_layers"])
+    return layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_layer(cfg, lp, x, enc_out, *, mode, cache=None, position=None,
+               positions=None):
+    h = layernorm(lp["ln1"], x, cfg.norm_eps)
+    new_cache = None
+    if mode == "fwd":
+        a = attn.attention_fwd(lp["attn"], h, cfg, positions=positions)
+    elif mode == "prefill":
+        a, new_cache = attn.attention_prefill(lp["attn"], h, cfg,
+                                              positions=positions)
+    else:
+        a, new_cache = attn.attention_decode(lp["attn"], h, cfg, cache,
+                                             position)
+    x = x + a
+    h = layernorm(lp["ln_x"], x, cfg.norm_eps)
+    x = x + cross_attention(lp["xattn"], h, enc_out, cfg)
+    h = layernorm(lp["ln2"], x, cfg.norm_eps)
+    return x + mlp(lp["mlp"], h, "gelu"), new_cache
+
+
+def _dec_positions(params, positions, dtype):
+    return params["dec_pos"].astype(dtype)[positions]
+
+
+def encdec_loss(params, cfg, tokens, labels, encoder_frames):
+    enc_out = encode(params, cfg, encoder_frames)
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    x = embed(params["embed"], tokens, cfg.dtype)
+    x = x + _dec_positions(params, positions, cfg.dtype)[None]
+
+    def layer(x, lp):
+        x, _ = _dec_layer(cfg, lp, x, enc_out, mode="fwd",
+                          positions=positions)
+        return shd.constrain_batch_major(x), None
+
+    x, _ = jax.lax.scan(layer, x, params["dec_layers"])
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = shd.constrain_logits(
+        unembed({}, x, table=params["embed"]["table"]))
+    return cross_entropy(logits, labels)
+
+
+def encdec_prefill(params, cfg, tokens, encoder_frames):
+    enc_out = encode(params, cfg, encoder_frames)
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    x = embed(params["embed"], tokens, cfg.dtype)
+    x = x + _dec_positions(params, positions, cfg.dtype)[None]
+
+    def layer(x, lp):
+        x, c = _dec_layer(cfg, lp, x, enc_out, mode="prefill",
+                          positions=positions)
+        return shd.constrain_batch_major(x), c
+
+    x, cache = jax.lax.scan(layer, x, params["dec_layers"])
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = shd.constrain_logits(
+        unembed({}, x[:, -1], table=params["embed"]["table"]))
+    return logits, {"self": cache, "encoder_out": enc_out}
+
+
+def encdec_decode(params, cfg, tokens, cache, position):
+    enc_out = cache["encoder_out"]
+    x = embed(params["embed"], tokens, cfg.dtype)
+    x = x + _dec_positions(params, position, cfg.dtype)[:, None, :]
+
+    def layer(x, inp):
+        lp, c = inp
+        x, new_c = _dec_layer(cfg, lp, x, enc_out, mode="decode", cache=c,
+                              position=position)
+        return shd.constrain_batch_major(x), new_c
+
+    x, new_self = jax.lax.scan(layer, x, (params["dec_layers"],
+                                          cache["self"]))
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = shd.constrain_logits(
+        unembed({}, x[:, -1], table=params["embed"]["table"]))
+    return logits, {"self": new_self, "encoder_out": enc_out}

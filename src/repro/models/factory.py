@@ -1,0 +1,92 @@
+"""Model factory: uniform (init, loss, prefill, decode) per architecture.
+
+Every arch exposes the same step signatures so the launcher, dry-run, and
+benchmarks are arch-agnostic:
+
+    init_fn(key)                                   -> params
+    loss_fn(params, batch)                         -> scalar
+    prefill_fn(params, batch)                      -> (logits, cache)
+    decode_fn(params, batch)                       -> (logits, cache)
+
+``batch`` is the dict produced by ``configs.input_specs``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.models import encdec, lm
+
+
+def make_model(cfg, *, kv_repeat: int = 1, kv_quant: bool = False):
+    if cfg.is_encoder_decoder:
+        def init_fn(key):
+            return encdec.init_encdec(key, cfg)
+
+        def loss_fn(params, batch):
+            return encdec.encdec_loss(params, cfg, batch["tokens"],
+                                      batch["labels"],
+                                      batch["encoder_frames"])
+
+        def prefill_fn(params, batch):
+            return encdec.encdec_prefill(params, cfg, batch["tokens"],
+                                         batch["encoder_frames"])
+
+        def decode_fn(params, batch):
+            return encdec.encdec_decode(params, cfg, batch["tokens"],
+                                        batch["cache"], batch["position"])
+    else:
+        def init_fn(key):
+            return lm.init_lm(key, cfg)
+
+        def loss_fn(params, batch):
+            return lm.lm_loss(params, cfg, batch["tokens"], batch["labels"])
+
+        def prefill_fn(params, batch):
+            return lm.lm_prefill(params, cfg, batch["tokens"],
+                                 kv_repeat=kv_repeat, kv_quant=kv_quant)
+
+        def decode_fn(params, batch):
+            return lm.lm_decode(params, cfg, batch["tokens"],
+                                batch["cache"], batch["position"])
+    return {"init": init_fn, "loss": loss_fn, "prefill": prefill_fn,
+            "decode": decode_fn}
+
+
+def param_specs(cfg, *, inference: bool = False):
+    """ShapeDtypeStruct pytree of params — no allocation.
+
+    inference=True casts matrix params (ndim >= 2) to the compute dtype
+    (production serving loads bf16 weights; per-step f32->bf16 converts
+    otherwise add ~50% to parameter HBM reads — §Perf hillclimb 1 iter 3).
+    Norm scales/biases stay f32.
+    """
+    model = make_model(cfg)
+    specs = jax.eval_shape(model["init"], jax.random.key(0))
+    if not inference:
+        return specs
+    import jax.numpy as jnp
+
+    def cast(s):
+        if s.dtype == jnp.float32 and s.ndim >= 2:
+            return jax.ShapeDtypeStruct(s.shape, cfg.dtype)
+        return s
+
+    return jax.tree.map(cast, specs)
+
+
+def cache_specs(cfg, batch: int, seq_len: int, kv_repeat: int = 1,
+                kv_quant: bool = False):
+    """Cache structure for a decode cell, derived from the actual prefill
+    function via eval_shape (no allocation, always layout-consistent)."""
+    import jax.numpy as jnp
+    model = make_model(cfg, kv_repeat=kv_repeat, kv_quant=kv_quant)
+    specs = param_specs(cfg)
+    batch_spec = {"tokens": jax.ShapeDtypeStruct((batch, seq_len),
+                                                 jnp.int32)}
+    if cfg.is_encoder_decoder:
+        batch_spec["encoder_frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_positions, cfg.d_model), cfg.dtype)
+    out = jax.eval_shape(model["prefill"], specs, batch_spec)
+    return out[1]

@@ -1,0 +1,150 @@
+"""Shared primitive layers: norms, rotary embeddings, MLPs, embeddings.
+
+Pure-pytree parameter style: every layer is an ``init_*`` returning a dict of
+arrays and an ``apply`` function.  No framework dependency; all control flow
+is jax.lax.  Compute dtype follows the config; params are stored in f32
+(master weights) and cast at use.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int) -> dict:
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dtype)
+
+
+def init_layernorm(dim: int) -> dict:
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"] + params["bias"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim//2,)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv   # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., seq, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: float = None) -> jax.Array:
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+def init_mlp(key, d_model: int, d_ff: int, mlp_type: str,
+             bias: bool = False) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(k1, (d_model, d_ff))
+        p["w_up"] = dense_init(k2, (d_model, d_ff))
+        p["w_down"] = dense_init(k3, (d_ff, d_model))
+    elif mlp_type == "gelu":
+        p["w_up"] = dense_init(k1, (d_model, d_ff))
+        p["w_down"] = dense_init(k2, (d_ff, d_model))
+        if bias:
+            p["b_up"] = jnp.zeros((d_ff,), jnp.float32)
+            p["b_down"] = jnp.zeros((d_model,), jnp.float32)
+    else:
+        raise ValueError(mlp_type)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, mlp_type: str) -> jax.Array:
+    dtype = x.dtype
+    if mlp_type in ("swiglu", "geglu"):
+        gate = x @ params["w_gate"].astype(dtype)
+        up = x @ params["w_up"].astype(dtype)
+        act = jax.nn.silu(gate) if mlp_type == "swiglu" else \
+            jax.nn.gelu(gate, approximate=True)
+        return (act * up) @ params["w_down"].astype(dtype)
+    h = x @ params["w_up"].astype(dtype)
+    if "b_up" in params:
+        h = h + params["b_up"].astype(dtype)
+    h = jax.nn.gelu(h, approximate=True)
+    out = h @ params["w_down"].astype(dtype)
+    if "b_down" in params:
+        out = out + params["b_down"].astype(dtype)
+    return out
+
+
+def mlp_flops(d_model: int, d_ff: int, mlp_type: str, n_tokens: int) -> float:
+    n_mats = 3 if mlp_type in ("swiglu", "geglu") else 2
+    return 2.0 * n_mats * d_model * d_ff * n_tokens
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d_model),
+                                       jnp.float32) * 0.02}
+
+
+def embed(params: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params: dict, x: jax.Array, table: jax.Array = None) -> jax.Array:
+    """Logits in f32 (softmax stability)."""
+    t = table if table is not None else params["table"]
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      t.astype(jnp.float32))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 1e-4) -> jax.Array:
+    """Mean token cross-entropy with optional z-loss; logits f32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)

@@ -1,0 +1,247 @@
+"""Decoder-only LM assembly: embed -> scan over layer periods -> norm -> head.
+
+Layer stacks are ``lax.scan``s over *periods* of the block pattern (period=1
+for homogeneous archs): compact HLO at any depth, which keeps the 512-device
+AOT dry-run compiles tractable (see DESIGN.md §6).  Heterogeneous patterns
+(gemma3 5:1, jamba 1:7+MoE, xlstm m/s) unroll one period inside the scan
+body.  Training wraps the period body in ``jax.checkpoint`` (activation
+recomputation at period boundaries).
+
+Modes: ``lm_loss`` (train), ``lm_prefill`` (full sequence -> last logits +
+cache), ``lm_decode`` (one token vs cache).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm, xlstm
+from repro.models.layers import (cross_entropy, embed, init_embedding,
+                                 init_mlp, init_rmsnorm, mlp, rmsnorm,
+                                 unembed)
+from repro.runtime import sharding as shd
+
+ATTN_KINDS = ("attn", "local", "global")
+
+
+def _position_is_moe(cfg, p: int) -> bool:
+    if cfg.n_experts == 0:
+        return False
+    assert len(cfg.block_pattern) % cfg.moe_every == 0
+    return p % cfg.moe_every == (cfg.moe_every - 1)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg, p: int) -> dict:
+    kind = cfg.block_pattern[p]
+    ks = jax.random.split(key, 4)
+    params = {"ln1": init_rmsnorm(cfg.d_model)}
+    if kind in ATTN_KINDS:
+        params["attn"] = attn.init_attention(ks[0], cfg)
+    elif kind == "mamba":
+        params["mamba"] = ssm.init_mamba(ks[0], cfg)
+    elif kind == "mlstm":
+        params["core"] = xlstm.init_mlstm(ks[0], cfg)
+        return params
+    elif kind == "slstm":
+        params["core"] = xlstm.init_slstm(ks[0], cfg)
+        return params
+    else:
+        raise ValueError(kind)
+    params["ln2"] = init_rmsnorm(cfg.d_model)
+    if _position_is_moe(cfg, p):
+        params["moe"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        params["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    return params
+
+
+def init_lm(key, cfg) -> dict:
+    P = len(cfg.block_pattern)
+    nper = cfg.n_periods
+    keys = jax.random.split(key, P + 3)
+    params = {"embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model),
+              "final_norm": init_rmsnorm(cfg.d_model)}
+    blocks = {}
+    for p in range(P):
+        pkeys = jax.random.split(keys[p + 1], nper)
+        blocks[f"pos{p}"] = jax.vmap(
+            lambda k, _p=p: init_block(k, cfg, _p))(pkeys)
+    params["blocks"] = blocks
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(keys[-1], cfg.vocab_size,
+                                           cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# One block
+# ---------------------------------------------------------------------------
+
+def apply_block(cfg, p: int, params: dict, x: jax.Array, *, mode: str,
+                cache: dict = None, position: jax.Array = None,
+                positions: jax.Array = None, attn_impl: str = "auto",
+                kv_repeat: int = 1, kv_quant: bool = False):
+    """Returns (x, new_cache, aux)."""
+    kind = cfg.block_pattern[p]
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        if mode == "fwd":
+            a = attn.attention_fwd(params["attn"], h, cfg, kind=kind,
+                                   positions=positions, impl=attn_impl)
+        elif mode == "prefill":
+            a, new_cache = attn.attention_prefill(
+                params["attn"], h, cfg, kind=kind, positions=positions,
+                impl=attn_impl, kv_repeat=kv_repeat, kv_quant=kv_quant)
+        else:
+            a, new_cache = attn.attention_decode(
+                params["attn"], h, cfg, cache, position, kind=kind)
+        x = x + a
+    elif kind == "mamba":
+        if mode == "fwd":
+            a = ssm.mamba_fwd(params["mamba"], h, cfg)
+        elif mode == "prefill":
+            a, new_cache = ssm.mamba_prefill(params["mamba"], h, cfg)
+        else:
+            a, new_cache = ssm.mamba_decode(params["mamba"], h, cfg, cache)
+        x = x + a
+    elif kind in ("mlstm", "slstm"):
+        fns = {"mlstm": (xlstm.mlstm_fwd, xlstm.mlstm_prefill,
+                         xlstm.mlstm_decode),
+               "slstm": (xlstm.slstm_fwd, xlstm.slstm_prefill,
+                         xlstm.slstm_decode)}[kind]
+        if mode == "fwd":
+            a = fns[0](params["core"], h, cfg)
+        elif mode == "prefill":
+            a, new_cache = fns[1](params["core"], h, cfg)
+        else:
+            a, new_cache = fns[2](params["core"], h, cfg, cache)
+        return x + a, new_cache, aux
+    else:
+        raise ValueError(kind)
+
+    h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if "moe" in params:
+        if mode == "fwd":
+            m, aux = moe_lib.moe_apply(params["moe"], h, cfg)
+        else:
+            m, _ = moe_lib.moe_apply(params["moe"], h, cfg)
+    else:
+        m = mlp(params["mlp"], h, cfg.mlp_type)
+    return x + m, new_cache, aux
+
+
+def apply_period(cfg, period_params: dict, x: jax.Array, *, mode: str,
+                 cache: dict = None, position=None, positions=None,
+                 attn_impl: str = "auto", kv_repeat: int = 1,
+                 kv_quant: bool = False):
+    """One full period (all positions).  Standalone for roofline lowering."""
+    P = len(cfg.block_pattern)
+    new_cache = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for p in range(P):
+        c_in = cache[f"pos{p}"] if cache is not None else None
+        x, c_out, aux = apply_block(
+            cfg, p, period_params[f"pos{p}"], x, mode=mode, cache=c_in,
+            position=position, positions=positions, attn_impl=attn_impl,
+            kv_repeat=kv_repeat, kv_quant=kv_quant)
+        if c_out is not None:
+            new_cache[f"pos{p}"] = c_out
+        aux_total = aux_total + aux
+    return x, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Full stacks
+# ---------------------------------------------------------------------------
+
+def _embed_in(params, cfg, tokens):
+    x = embed(params["embed"], tokens, cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+    return shd.constrain_batch_major(x)
+
+
+def _logits(params, cfg, x):
+    table = params["embed"]["table"] if cfg.tie_embeddings else \
+        params["lm_head"]["table"]
+    return shd.constrain_logits(unembed({}, x, table=table))
+
+
+def lm_backbone(params, cfg, tokens, *, positions=None,
+                attn_impl: str = "auto", remat: bool = False):
+    """(B,S) tokens -> (B,S,d) hidden states (pre-final-norm is applied)."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    x = _embed_in(params, cfg, tokens)
+
+    def period_fn(carry, pp):
+        x, aux = carry
+        x, _, aux_p = apply_period(cfg, pp, x, mode="fwd",
+                                   positions=positions, attn_impl=attn_impl)
+        return (shd.constrain_batch_major(x), aux + aux_p), None
+
+    fn = jax.checkpoint(period_fn) if remat else period_fn
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def lm_loss(params, cfg, tokens, labels, *, attn_impl: str = "auto",
+            aux_coef: float = 0.01, remat: bool = True):
+    x, aux = lm_backbone(params, cfg, tokens, attn_impl=attn_impl,
+                         remat=remat)
+    logits = _logits(params, cfg, x)
+    loss = cross_entropy(logits, labels)
+    if cfg.n_experts:
+        loss = loss + aux_coef * aux / max(cfg.n_periods, 1)
+    return loss
+
+
+def lm_prefill(params, cfg, tokens, *, attn_impl: str = "auto",
+               kv_repeat: int = 1, kv_quant: bool = False):
+    """Returns (last-position logits (B,V), cache pytree)."""
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    x = _embed_in(params, cfg, tokens)
+
+    def period_fn(x, pp):
+        x, cache_p, _ = apply_period(cfg, pp, x, mode="prefill",
+                                     positions=positions,
+                                     attn_impl=attn_impl,
+                                     kv_repeat=kv_repeat, kv_quant=kv_quant)
+        return shd.constrain_batch_major(x), cache_p
+
+    x, cache = jax.lax.scan(period_fn, x, params["blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x[:, -1])
+    return logits, cache
+
+
+def lm_decode(params, cfg, tokens, cache, position):
+    """tokens: (B,1); position: (B,) index of the new token.
+    Returns (logits (B,V), new cache)."""
+    x = _embed_in(params, cfg, tokens)
+
+    def period_fn(x, inp):
+        pp, cache_p = inp
+        x, new_cache_p, _ = apply_period(cfg, pp, x, mode="decode",
+                                         cache=cache_p, position=position)
+        return shd.constrain_batch_major(x), new_cache_p
+
+    x, new_cache = jax.lax.scan(period_fn, x, (params["blocks"], cache))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x[:, -1])
+    return logits, new_cache

@@ -1,0 +1,173 @@
+"""Mamba (S6) selective state-space layer.
+
+Diagonal linear recurrence h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t with
+input-dependent (selective) dt/B/C.  Implemented as a *chunked* scan: within
+a chunk the recurrence is an associative scan (log-depth, fully parallel);
+chunks are chained with a lax.scan carrying the state — bounded memory at
+500k sequence lengths and a compact HLO.  Registers CostBook corrections for
+the chunk loop.  Decode is a single-token state update against the cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import costbook
+from repro.models.layers import dense_init
+
+
+def init_mamba(key, cfg) -> dict:
+    d = cfg.d_model
+    inner = d * cfg.ssm_expand
+    state = cfg.ssm_state
+    dt_rank = max(8, int(np.ceil(d / 16)))
+    ks = jax.random.split(key, 8)
+    # S4-style A init: -(1..state) per channel
+    a = jnp.tile(jnp.arange(1, state + 1, dtype=jnp.float32)[None, :],
+                 (inner, 1))
+    dt_bias = jnp.log(jnp.expm1(  # softplus^-1 of U(1e-3, 1e-1)
+        jax.random.uniform(ks[6], (inner,), minval=1e-3, maxval=1e-1)))
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * inner)),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, inner), scale=0.2),
+        "conv_b": jnp.zeros((inner,), jnp.float32),
+        "w_b": dense_init(ks[2], (inner, state)),
+        "w_c": dense_init(ks[3], (inner, state)),
+        "w_dt_down": dense_init(ks[4], (inner, dt_rank)),
+        "w_dt_up": dense_init(ks[5], (dt_rank, inner)),
+        "dt_bias": dt_bias,
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((inner,), jnp.float32),
+        "w_out": dense_init(ks[7], (inner, d)),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: jax.Array = None) -> jax.Array:
+    """Depthwise causal conv.  u: (B,S,inner); w: (K,inner).
+    prev: (B,K-1,inner) carried context for decode/chunking (None = zeros)."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([prev, u], axis=1)                    # (B,S+K-1,in)
+    out = sum(up[:, i:i + u.shape[1]] * w[i].astype(u.dtype)
+              for i in range(K))
+    return out + b.astype(u.dtype)
+
+
+def _ssm_params(params, u, cfg):
+    """Selective dt/B/C from the (conv'd, silu'd) input u: (B,L,inner)."""
+    f32 = jnp.float32
+    dt = u.astype(f32) @ params["w_dt_down"] @ params["w_dt_up"]
+    dt = jax.nn.softplus(dt + params["dt_bias"])               # (B,L,inner)
+    bm = u.astype(f32) @ params["w_b"]                         # (B,L,state)
+    cm = u.astype(f32) @ params["w_c"]                         # (B,L,state)
+    a = -jnp.exp(params["a_log"])                              # (inner,state)
+    da = jnp.exp(dt[..., None] * a)                            # (B,L,in,st)
+    dbu = (dt * u.astype(f32))[..., None] * bm[:, :, None, :]  # (B,L,in,st)
+    return da, dbu, cm, dt
+
+
+def _chunk_scan(da, dbu, h0):
+    """Associative scan within a chunk; returns (h_all, h_last).
+    da/dbu: (B,L,inner,state); h0: (B,inner,state)."""
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    acum, hloc = jax.lax.associative_scan(comb, (da, dbu), axis=1)
+    h = acum * h0[:, None] + hloc
+    return h, h[:, -1]
+
+
+def mamba_fwd(params: dict, x: jax.Array, cfg, chunk: int = 256):
+    """Full-sequence forward.  x: (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    dtype = x.dtype
+    inner = d * cfg.ssm_expand
+    state = cfg.ssm_state
+    uz = x @ params["w_in"].astype(dtype)
+    u, z = jnp.split(uz, 2, axis=-1)
+    u = jax.nn.silu(_causal_conv(u, params["conv_w"], params["conv_b"]))
+
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    uc = u.reshape(B, nc, chunk, inner).swapaxes(0, 1)          # (nc,B,L,in)
+
+    def step(h, u_blk):
+        da, dbu, cm, _ = _ssm_params(params, u_blk, cfg)
+        h_all, h_last = _chunk_scan(da, dbu, h)
+        y = jnp.einsum("blis,bls->bli", h_all, cm)
+        return h_last, y.astype(dtype)
+
+    h0 = jnp.zeros((B, inner, state), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, uc)
+    y = ys.swapaxes(0, 1).reshape(B, S, inner)
+    y = y + u * params["d_skip"].astype(dtype)
+    y = y * jax.nn.silu(z)
+    costbook.record(
+        "mamba_scan",
+        total_flops=10.0 * B * S * inner * state,
+        total_bytes=8.0 * B * S * inner * state,
+        trips=nc)
+    return y @ params["w_out"].astype(dtype)
+
+
+def mamba_prefill(params, x, cfg, chunk: int = 256):
+    """Returns (out, cache) — cache carries final ssm state + conv tail."""
+    B, S, d = x.shape
+    dtype = x.dtype
+    inner = d * cfg.ssm_expand
+    uz = x @ params["w_in"].astype(dtype)
+    u, z = jnp.split(uz, 2, axis=-1)
+    uc_raw = u
+    u = jax.nn.silu(_causal_conv(u, params["conv_w"], params["conv_b"]))
+    chunk = min(chunk, S)
+    nc = S // chunk
+    ucs = u.reshape(B, nc, chunk, inner).swapaxes(0, 1)
+
+    def step(h, u_blk):
+        da, dbu, cm, _ = _ssm_params(params, u_blk, cfg)
+        h_all, h_last = _chunk_scan(da, dbu, h)
+        y = jnp.einsum("blis,bls->bli", h_all, cm)
+        return h_last, y.astype(dtype)
+
+    h0 = jnp.zeros((B, inner, cfg.ssm_state), jnp.float32)
+    h_final, ys = jax.lax.scan(step, h0, ucs)
+    y = ys.swapaxes(0, 1).reshape(B, S, inner)
+    y = (y + u * params["d_skip"].astype(dtype)) * jax.nn.silu(z)
+    out = y @ params["w_out"].astype(dtype)
+    cache = {"ssm": h_final,
+             "conv": uc_raw[:, S - (cfg.ssm_conv - 1):, :]}
+    return out, cache
+
+
+def mamba_decode(params, x, cfg, cache):
+    """One token.  x: (B,1,d); cache: {ssm:(B,inner,state), conv:(B,K-1,inner)}."""
+    B, _, d = x.shape
+    dtype = x.dtype
+    uz = x @ params["w_in"].astype(dtype)
+    u_raw, z = jnp.split(uz, 2, axis=-1)                        # (B,1,inner)
+    new_conv = jnp.concatenate([cache["conv"], u_raw], axis=1)[:, 1:]
+    u = jax.nn.silu(
+        _causal_conv(u_raw, params["conv_w"], params["conv_b"],
+                     prev=cache["conv"].astype(dtype)))
+    da, dbu, cm, _ = _ssm_params(params, u, cfg)                # (B,1,...)
+    h = cache["ssm"] * da[:, 0] + dbu[:, 0]                    # (B,in,st)
+    y = jnp.einsum("bis,bs->bi", h, cm[:, 0])[:, None, :].astype(dtype)
+    y = (y + u * params["d_skip"].astype(dtype)) * jax.nn.silu(z)
+    out = y @ params["w_out"].astype(dtype)
+    return out, {"ssm": h, "conv": new_conv}
+
+
+def mamba_flops(cfg, n_tokens: int) -> float:
+    d = cfg.d_model
+    inner = d * cfg.ssm_expand
+    state = cfg.ssm_state
+    dt_rank = max(8, int(np.ceil(d / 16)))
+    proj = 2.0 * n_tokens * d * 3 * inner                       # in + out
+    sel = 2.0 * n_tokens * inner * (2 * state + 2 * dt_rank)
+    scan = 10.0 * n_tokens * inner * state
+    return proj + sel + scan

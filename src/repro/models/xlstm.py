@@ -1,0 +1,246 @@
+"""xLSTM blocks: mLSTM (matrix memory, 2x expansion) and sLSTM (scalar
+memory with head-wise recurrent gating).
+
+Both use exponential gating with the max-stabilizer state m (xLSTM paper,
+arXiv:2405.04517).  The recurrences are token-level lax.scans — sLSTM is
+inherently sequential (gates depend on h_{t-1}); mLSTM additionally has a
+chunked-parallel form implemented as a §Perf optimization in
+``mlstm_fwd_chunked``.  CostBook corrections are registered for the scans.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import costbook
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg) -> dict:
+    d = cfg.d_model
+    inner = 2 * d
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * inner)),     # -> (u, z)
+        "w_q": dense_init(ks[1], (inner, inner)),
+        "w_k": dense_init(ks[2], (inner, inner)),
+        "w_v": dense_init(ks[3], (inner, inner)),
+        "w_i": dense_init(ks[4], (inner, nh), scale=0.02),
+        "b_i": jnp.zeros((nh,), jnp.float32),
+        "w_f": dense_init(ks[5], (inner, nh), scale=0.02),
+        "b_f": jnp.full((nh,), 3.0, jnp.float32),      # forget-open init
+        "norm": init_rmsnorm(inner),
+        "w_down": dense_init(ks[6], (inner, d)),
+    }
+
+
+def _mlstm_qkvgates(params, x, cfg):
+    dtype = x.dtype
+    d = cfg.d_model
+    inner = 2 * d
+    nh = cfg.n_heads
+    dh = inner // nh
+    uz = x @ params["w_up"].astype(dtype)
+    u, z = jnp.split(uz, 2, axis=-1)                   # (B,S,inner)
+    B, S, _ = u.shape
+    q = (u @ params["w_q"].astype(dtype)).reshape(B, S, nh, dh)
+    k = (u @ params["w_k"].astype(dtype)).reshape(B, S, nh, dh) / np.sqrt(dh)
+    v = (u @ params["w_v"].astype(dtype)).reshape(B, S, nh, dh)
+    it = (u.astype(jnp.float32) @ params["w_i"] + params["b_i"])   # (B,S,nh)
+    ft = (u.astype(jnp.float32) @ params["w_f"] + params["b_f"])
+    return q, k, v, it, ft, z
+
+
+def _mlstm_step(carry, inp):
+    """carry: (C:(B,nh,dh,dh), n:(B,nh,dh), m:(B,nh)); one token."""
+    C, n, m = carry
+    q, k, v, it, ft = inp                              # (B,nh,dh)x3,(B,nh)x2
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])           # (B,nh,dh,dh)
+    n = f_p[..., None] * n + i_p[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhd->bhe", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf)),
+                      jnp.exp(-m_new))[..., None]
+    h = num / den
+    return (C, n, m_new), h
+
+
+def mlstm_fwd(params: dict, x: jax.Array, cfg) -> jax.Array:
+    B, S, d = x.shape
+    dtype = x.dtype
+    inner = 2 * d
+    nh = cfg.n_heads
+    dh = inner // nh
+    q, k, v, it, ft, z = _mlstm_qkvgates(params, x, cfg)
+    C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, nh, dh), jnp.float32)
+    m0 = jnp.zeros((B, nh), jnp.float32)
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          it.swapaxes(0, 1), ft.swapaxes(0, 1))
+    _, hs = jax.lax.scan(_mlstm_step, (C0, n0, m0), xs)
+    h = hs.swapaxes(0, 1).reshape(B, S, inner).astype(dtype)
+    costbook.record("mlstm_scan",
+                    total_flops=6.0 * B * S * nh * dh * dh,
+                    total_bytes=8.0 * B * S * nh * dh * dh,
+                    trips=S)
+    h = rmsnorm(params["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    return h @ params["w_down"].astype(dtype)
+
+
+def mlstm_prefill(params, x, cfg):
+    B, S, d = x.shape
+    dtype = x.dtype
+    inner = 2 * d
+    nh = cfg.n_heads
+    dh = inner // nh
+    q, k, v, it, ft, z = _mlstm_qkvgates(params, x, cfg)
+    C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, nh, dh), jnp.float32)
+    m0 = jnp.zeros((B, nh), jnp.float32)
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          it.swapaxes(0, 1), ft.swapaxes(0, 1))
+    (C, n, m), hs = jax.lax.scan(_mlstm_step, (C0, n0, m0), xs)
+    h = hs.swapaxes(0, 1).reshape(B, S, inner).astype(dtype)
+    h = rmsnorm(params["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    return h @ params["w_down"].astype(dtype), {"C": C, "n": n, "m": m}
+
+
+def mlstm_decode(params, x, cfg, cache):
+    B, _, d = x.shape
+    dtype = x.dtype
+    inner = 2 * d
+    nh = cfg.n_heads
+    dh = inner // nh
+    q, k, v, it, ft, z = _mlstm_qkvgates(params, x, cfg)
+    inp = (q[:, 0], k[:, 0], v[:, 0], it[:, 0], ft[:, 0])
+    (C, n, m), h = _mlstm_step((cache["C"], cache["n"], cache["m"]), inp)
+    h = h.reshape(B, 1, inner).astype(dtype)
+    h = rmsnorm(params["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    return h @ params["w_down"].astype(dtype), {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 4)
+    return {
+        "w_x": dense_init(ks[0], (d, 4 * d)),          # z,i,f,o pre-acts
+        "b_x": jnp.concatenate([
+            jnp.zeros((d,)), jnp.zeros((d,)),
+            jnp.full((d,), 3.0), jnp.zeros((d,))]).astype(jnp.float32),
+        "r": dense_init(ks[1], (nh, dh, 4 * dh),       # head-wise recurrence
+                        scale=1.0 / np.sqrt(dh)),
+        "norm": init_rmsnorm(d),
+        "w_out": dense_init(ks[2], (d, d)),
+    }
+
+
+def _slstm_step(params, cfg, carry, xproj):
+    """carry: (h,c,n,m) each (B,nh,dh); xproj: (B,4d) input pre-activation."""
+    h, c, n, m = carry
+    B = h.shape[0]
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    rec = jnp.einsum("bhd,hde->bhe", h, params["r"])   # (B,nh,4dh)
+    pre = xproj.reshape(B, nh, 4 * dh) + rec
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)        # (B,nh,dh)
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c = f_p * c + i_p * zt
+    n = f_p * n + i_p
+    h_new = ot * c / jnp.maximum(n, 1e-6)
+    return (h_new, c, n, m_new)
+
+
+def slstm_fwd(params: dict, x: jax.Array, cfg) -> jax.Array:
+    B, S, d = x.shape
+    dtype = x.dtype
+    nh = cfg.n_heads
+    dh = d // nh
+    xp = (x.astype(jnp.float32) @ params["w_x"] + params["b_x"])
+
+    def step(carry, xt):
+        new = _slstm_step(params, cfg, carry, xt)
+        return new, new[0]
+
+    z0 = jnp.zeros((B, nh, dh), jnp.float32)
+    m0 = jnp.zeros((B, nh, dh), jnp.float32)
+    _, hs = jax.lax.scan(step, (z0, z0, z0, m0), xp.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(dtype)
+    costbook.record("slstm_scan",
+                    total_flops=2.0 * B * S * nh * dh * 4 * dh,
+                    total_bytes=4.0 * B * S * d,
+                    trips=S)
+    h = rmsnorm(params["norm"], h, cfg.norm_eps)
+    return h @ params["w_out"].astype(dtype)
+
+
+def slstm_prefill(params, x, cfg):
+    B, S, d = x.shape
+    dtype = x.dtype
+    nh = cfg.n_heads
+    dh = d // nh
+    xp = (x.astype(jnp.float32) @ params["w_x"] + params["b_x"])
+
+    def step(carry, xt):
+        new = _slstm_step(params, cfg, carry, xt)
+        return new, new[0]
+
+    z0 = jnp.zeros((B, nh, dh), jnp.float32)
+    m0 = jnp.zeros((B, nh, dh), jnp.float32)
+    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(
+        step, (z0, z0, z0, m0), xp.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(dtype)
+    h = rmsnorm(params["norm"], h, cfg.norm_eps)
+    out = h @ params["w_out"].astype(dtype)
+    return out, {"h": h_f, "c": c_f, "n": n_f, "m": m_f}
+
+
+def slstm_decode(params, x, cfg, cache):
+    B, _, d = x.shape
+    dtype = x.dtype
+    xp = (x[:, 0].astype(jnp.float32) @ params["w_x"] + params["b_x"])
+    carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h_new, c, n, m = _slstm_step(params, cfg, carry, xp)
+    h = h_new.reshape(B, 1, d).astype(dtype)
+    h = rmsnorm(params["norm"], h, cfg.norm_eps)
+    out = h @ params["w_out"].astype(dtype)
+    return out, {"h": h_new, "c": c, "n": n, "m": m}
+
+
+def xlstm_flops(cfg, n_tokens: int, kind: str) -> float:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    if kind == "mlstm":
+        inner = 2 * d
+        dh = inner // nh
+        proj = 2.0 * n_tokens * d * (2 * inner) + \
+            2.0 * n_tokens * inner * (3 * inner + d)
+        rec = 6.0 * n_tokens * nh * dh * dh
+        return proj + rec
+    dh = d // nh
+    proj = 2.0 * n_tokens * d * 4 * d + 2.0 * n_tokens * d * d
+    rec = 2.0 * n_tokens * nh * dh * 4 * dh
+    return proj + rec

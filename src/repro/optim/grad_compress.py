@@ -1,0 +1,84 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for the DP all-reduce at 1000+ node scale).
+
+Per-leaf, per-block stochastic int8 quantization: the DP all-reduce then
+moves 4x fewer bytes (grads are f32).  Error feedback keeps the residual
+locally and re-adds it next step — convergence-neutral in expectation
+(Karimireddy et al. 2019).  Composable: wrap any grad tree before the
+optimizer; tests assert the quantization error bound and EF drift cancel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 2048
+
+
+def _quantize_leaf(g, key):
+    flat = g.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    units = flat / scale
+    noise = jax.random.uniform(key, units.shape) - 0.5
+    q = jnp.clip(jnp.round(units + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_leaf(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compress(grads, key):
+    """grads -> (quantized tree of (q, scale), same structure)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = [_quantize_leaf(g, k) for g, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def decompress(qtree, like):
+    def one(qs, g):
+        q, scale = qs
+        return _dequantize_leaf(q, scale, g.shape)
+    return jax.tree.map(one, qtree, like,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def compressed_grads_with_ef(grads, ef_state, key):
+    """(decompressed grads for the optimizer, new error-feedback state).
+
+    The all-reduce would operate on the int8 payload; on a single host this
+    function is semantically identical (quantize -> [all-reduce] ->
+    dequantize) and is what the distributed step wraps around psum.
+    """
+    if ef_state is None:
+        ef_state = jax.tree.map(jnp.zeros_like, grads)
+    corrected = jax.tree.map(lambda g, e: g + e, grads, ef_state)
+    q = compress(corrected, key)
+    deq = decompress(q, corrected)
+    new_ef = jax.tree.map(lambda c, d: c - d, corrected, deq)
+    return deq, new_ef
+
+
+def compression_ratio(grads) -> float:
+    """Bytes(int8+scales) / bytes(f32)."""
+    def leaf_bytes(g):
+        n = g.size
+        blocks = (n + BLOCK - 1) // BLOCK
+        return n * 1 + blocks * 4, n * 4
+    comp, full = 0, 0
+    for g in jax.tree.leaves(grads):
+        c, f = leaf_bytes(g)
+        comp += c
+        full += f
+    return comp / max(full, 1)

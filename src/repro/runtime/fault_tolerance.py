@@ -1,0 +1,65 @@
+"""Fault tolerance + straggler posture for 1000+ node runs.
+
+What executes here (and is tested):
+  * checkpoint/restart — atomic saves, auto-resume, bit-identical
+    continuation (tests/test_fault_tolerance.py kills a training run
+    mid-stream and verifies the restarted loss trajectory matches an
+    uninterrupted one exactly);
+  * elastic re-scale — host-gathered checkpoints restore onto a different
+    device count / mesh shape (re-shard on load);
+  * straggler mitigation — a step-time watchdog flags outlier steps; the
+    LargeVis layout runs under local-SGD (sync_every=H) so a slow worker
+    delays the psum only every H steps; LM training uses bounded-staleness
+    gradient accumulation (microbatches absorb jitter between syncs).
+
+What is posture-only on this CPU container (documented, not simulated away):
+real preemption signals (SIGTERM hooks call CheckpointManager.save_now) and
+multi-controller re-initialization are wired but exercised single-host.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import signal
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class Watchdog:
+    """Step-time outlier detection (straggler flagging)."""
+    window: int = 50
+    threshold: float = 3.0          # x median
+    _times: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=200), init=False)
+    stragglers: list = dataclasses.field(default_factory=list, init=False)
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self._times.append(dt)
+        if len(self._times) < 10:
+            return False
+        med = sorted(self._times)[len(self._times) // 2]
+        if dt > self.threshold * med:
+            self.stragglers.append((step, dt, med))
+            return True
+        return False
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT -> checkpoint-now-then-exit hook (cluster preemption)."""
+
+    def __init__(self, save_fn: Callable[[], None]):
+        self._save_fn = save_fn
+        self.triggered = False
+        self._prev = {}
+        for sig in (signal.SIGTERM,):
+            self._prev[sig] = signal.signal(sig, self._handle)
+
+    def _handle(self, signum, frame):
+        self.triggered = True
+        self._save_fn()
+
+    def restore_handlers(self):
+        for sig, prev in self._prev.items():
+            signal.signal(sig, prev)

@@ -1,0 +1,283 @@
+"""Sharding rules: DP / FSDP / TP / EP / SP as PartitionSpec patterns.
+
+Mesh axes: ("pod", "data", "model") multi-pod, ("data", "model") single-pod.
+
+  * batch (DP)          -> ("pod", "data")
+  * param FSDP shards   -> "data"  (pods replicate params; only the gradient
+                           all-reduce crosses the pod axis — hierarchical DP)
+  * heads / ff / vocab / expert-ff (TP, EP) -> "model"
+  * long-context decode (batch < dp size) -> KV sequence over "data" (SP;
+    XLA inserts the flash-decoding logsumexp/psum combine automatically)
+
+Every proposed axis is divisibility-guarded: a dim that doesn't divide over
+its mesh axis falls back to replication (e.g. kv_heads=8 on model=16) —
+so one rule set covers all ten architectures.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_POLICY = threading.local()
+
+
+@contextlib.contextmanager
+def activation_policy(mesh: Mesh, *, global_batch: int, train: bool = False):
+    """Trace-time policy: models call ``constrain_batch_major`` to anchor
+    activation shardings (batch over DP axes), which stops the SPMD
+    partitioner from resolving param-vs-batch axis conflicts by
+    replicating the batch (the 37 GiB-logits failure mode).  MoE reads the
+    policy to switch to shard_map local dispatch."""
+    prev = getattr(_POLICY, "v", None)
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    ok = global_batch % dp_size == 0 and global_batch >= dp_size
+    _POLICY.v = (mesh, dp if ok else None, train)
+    try:
+        yield
+    finally:
+        _POLICY.v = prev
+
+
+def current_policy():
+    """(mesh, dp_axes_or_None, train) or None."""
+    return getattr(_POLICY, "v", None)
+
+
+def constrain_batch_major(x):
+    """Shard dim 0 over the DP axes (no-op outside a policy or when the
+    batch doesn't cover the DP extent)."""
+    pol = getattr(_POLICY, "v", None)
+    if pol is None or pol[1] is None:
+        return x
+    mesh, dp = pol[0], pol[1]
+    spec = _guard(mesh, x.shape, [dp] + [None] * (x.ndim - 1))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_dim(x, dim: int):
+    """Shard dimension ``dim`` over the DP axes (policy-gated no-op)."""
+    pol = getattr(_POLICY, "v", None)
+    if pol is None or pol[1] is None:
+        return x
+    mesh, dp = pol[0], pol[1]
+    spec = [None] * x.ndim
+    spec[dim] = dp
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _guard(mesh, x.shape, spec)))
+
+
+def constrain_logits(x):
+    """(..., V) logits: batch over DP, vocab over model."""
+    pol = getattr(_POLICY, "v", None)
+    if pol is None:
+        return x
+    mesh, dp = pol[0], pol[1]
+    spec = [dp] + [None] * (x.ndim - 2) + ["model"]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _guard(mesh, x.shape, spec)))
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= _axis_size(mesh, n)
+        return out
+    return mesh.shape[name] if name in mesh.shape else 0
+
+
+def _guard(mesh: Mesh, shape, spec):
+    """Replace non-divisible / absent axes with None."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        size = _axis_size(mesh, ax)
+        if size and size > 0 and dim % size == 0 and dim >= size:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def fsdp_axis(mesh: Mesh, train: bool):
+    return "data" if train else None
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules (path-pattern -> axis proposal per dim)
+# ---------------------------------------------------------------------------
+
+_RULES = [
+    # (regex on joined path, proposal builder given ndim)
+    (r"(embed|lm_head)/table$", lambda nd: ["model", "fsdp"]),
+    (r"dec_pos$|enc_pos$", lambda nd: ["fsdp", None]),
+    (r"attn/w[qkv]$|xattn/w[qkv]$", lambda nd: ["fsdp", "model", None]),
+    (r"attn/wo$|xattn/wo$", lambda nd: ["model", None, "fsdp"]),
+    (r"attn/b[qkv]$", lambda nd: ["model", None]),
+    (r"mlp/w_(gate|up)$", lambda nd: ["fsdp", "model"]),
+    (r"mlp/w_down$", lambda nd: ["model", "fsdp"]),
+    (r"mlp/b_up$", lambda nd: ["model"]),
+    (r"mlp/b_down$", lambda nd: [None]),
+    (r"moe/router$", lambda nd: ["fsdp", None]),
+    (r"moe/w_(gate|up)$", lambda nd: ["expert", "fsdp", "model"]),
+    (r"moe/w_down$", lambda nd: ["expert", "model", "fsdp"]),
+    (r"mamba/w_in$", lambda nd: ["fsdp", "model"]),
+    (r"mamba/conv_w$", lambda nd: [None, "model"]),
+    (r"mamba/conv_b$|mamba/d_skip$|mamba/dt_bias$", lambda nd: ["model"]),
+    (r"mamba/w_[bc]$|mamba/a_log$|mamba/w_dt_down$", lambda nd: ["model", None]),
+    (r"mamba/w_dt_up$", lambda nd: [None, "model"]),
+    (r"mamba/w_out$", lambda nd: ["model", "fsdp"]),
+    (r"core/w_up$|core/w_x$", lambda nd: ["fsdp", "model"]),
+    (r"core/w_[qkv]$", lambda nd: [None, "model"]),
+    (r"core/w_[if]$", lambda nd: ["model", None]),
+    (r"core/b_[ifx]$", lambda nd: ["model"]),
+    (r"core/r$", lambda nd: [None, None, None]),
+    (r"core/w_down$|core/w_out$", lambda nd: ["model", "fsdp"]),
+    (r"core/norm/scale$", lambda nd: ["model"]),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_pspec(path, leaf, mesh: Mesh, *, train: bool,
+                stacked: bool) -> P:
+    """PartitionSpec for one param leaf.  ``stacked`` leaves carry a leading
+    period axis (never sharded)."""
+    s = _path_str(path)
+    shape = leaf.shape
+    fsdp = fsdp_axis(mesh, train)
+    body = shape[1:] if stacked else shape
+    proposal: Optional[list] = None
+    for pat, builder in _RULES:
+        if re.search(pat, s):
+            proposal = builder(len(body))
+            break
+    if proposal is None or len(proposal) != len(body):
+        proposal = [None] * len(body)
+    resolved = []
+    for ax in proposal:
+        if ax == "fsdp":
+            resolved.append(fsdp)
+        elif ax == "expert":
+            # EP: experts over "data" at inference (no FSDP there);
+            # during training "data" is taken by FSDP, so replicate E
+            resolved.append(None if train else "data")
+        else:
+            resolved.append(ax)
+    spec = _guard(mesh, body, resolved)
+    if stacked:
+        spec = P(None, *spec)
+    return spec
+
+
+def params_shardings(param_tree, mesh: Mesh, *, train: bool):
+    """NamedSharding pytree for params (stacked block detection by path)."""
+    def one(path, leaf):
+        s = _path_str(path)
+        stacked = "blocks/" in s or "_layers/" in s
+        return NamedSharding(mesh, param_pspec(path, leaf, mesh, train=train,
+                                               stacked=stacked))
+    return jax.tree_util.tree_map_with_path(one, param_tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_tree, mesh: Mesh, *, global_batch: int):
+    """Tokens/labels over DP axes; decode caches batch- or sequence-sharded
+    depending on whether the batch covers the DP extent (SP fallback)."""
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    batch_first = global_batch % dp_size == 0 and global_batch >= dp_size
+
+    def one(path, leaf):
+        s = _path_str(path)
+        shape = leaf.shape
+        if "cache" in s:
+            return NamedSharding(mesh, _cache_pspec(s, shape, mesh,
+                                                    batch_first))
+        # tokens / labels / position / encoder_frames
+        if len(shape) >= 1 and batch_first:
+            spec = [dp] + [None] * (len(shape) - 1)
+        else:
+            spec = [None] * len(shape)
+        if s.endswith("encoder_frames") and len(shape) == 3:
+            spec = [dp if batch_first else None, None, None]
+        return NamedSharding(mesh, _guard(mesh, shape, spec))
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def _cache_pspec(s: str, shape, mesh: Mesh, batch_first: bool) -> P:
+    """Stacked cache leaves: (n_periods, B, ...).
+
+    attention k/v (n_per,B,S,KVH,hd): batch-sharded when possible, else
+    sequence-parallel over "data"; head/hd dim over "model".
+    mamba ssm (n_per,B,inner,state) / conv (n_per,B,K-1,inner);
+    xlstm C (n_per,B,nh,dh,dh) n (n_per,B,nh,dh) m (n_per,B,nh).
+    encoder_out (B,F,d).
+    """
+    dp = dp_axes(mesh)
+    if s.endswith("encoder_out"):
+        return _guard(mesh, shape, [dp if batch_first else None, None, None])
+    nd = len(shape)
+    if s.endswith("/k") or s.endswith("/v") or \
+            s.endswith("_scale"):
+        if batch_first:
+            return _guard(mesh, shape, [None, dp, None, "model", None]
+                          if shape[3] % max(_axis_size(mesh, "model"), 1) == 0
+                          else [None, dp, None, None, "model"])
+        # SP: shard the KV sequence over "data" (+ heads/hd over model)
+        return _guard(mesh, shape, [None, None, "data", "model", None]
+                      if shape[3] % max(_axis_size(mesh, "model"), 1) == 0
+                      else [None, None, "data", None, "model"])
+    if s.endswith("/ssm"):
+        return _guard(mesh, shape,
+                      [None, dp if batch_first else None, "model", None])
+    if s.endswith("/conv"):
+        return _guard(mesh, shape,
+                      [None, dp if batch_first else None, None, "model"])
+    if s.endswith("/C"):
+        return _guard(mesh, shape,
+                      [None, dp if batch_first else None, None, "model", None])
+    if s.endswith("/n") or s.endswith("/m") or s.endswith("/c") or \
+            s.endswith("/h"):
+        spec = [None, dp if batch_first else None] + [None] * (nd - 2)
+        return _guard(mesh, shape, spec)
+    spec = [None, dp if batch_first else None] + [None] * (nd - 2)
+    return _guard(mesh, shape, spec)
+
+
+def out_shardings_for(kind: str, mesh: Mesh, *, global_batch: int):
+    """Loss: replicated scalar.  Logits: (B, V) -> (dp, model)."""
+    dp = dp_axes(mesh)
+    if kind == "loss":
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(dp, "model"))

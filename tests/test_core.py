@@ -1,0 +1,171 @@
+"""LargeVis core: KNN construction, exploring, weights, samplers, layout."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.largevis_default import LargeVisConfig
+from repro.core import knn as knn_lib
+from repro.core import metrics, perplexity
+from repro.core import sampler as sampler_lib
+from repro.core.largevis import largevis
+from repro.core.neighbor_explore import neighbor_explore, reverse_neighbors
+from repro.data.synthetic import gaussian_mixture
+
+KEY = jax.random.key(0)
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    x, labels = gaussian_mixture(KEY, 2000, 32, 8)
+    return x, labels
+
+
+@pytest.fixture(scope="module")
+def true_knn(blobs):
+    x, _ = blobs
+    return knn_lib.brute_force_knn(x, 15)
+
+
+def test_brute_force_knn_correct(blobs):
+    x, _ = blobs
+    idx, dist = knn_lib.brute_force_knn(x[:300], 5)
+    # exact check vs numpy on a small slice
+    xn = np.asarray(x[:300], np.float64)
+    d = ((xn[:, None] - xn[None]) ** 2).sum(-1)
+    np.fill_diagonal(d, np.inf)
+    want = np.argsort(d, axis=1)[:, :5]
+    got_d = np.sort(np.asarray(dist), axis=1)
+    want_d = np.sort(np.take_along_axis(d, want, 1), axis=1)
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-4, atol=1e-3)
+
+
+def test_forest_then_explore_recall_progression(blobs, true_knn):
+    """Paper C1 (Fig 3): exploring lifts recall toward 1.0 in <=3 iters."""
+    x, _ = blobs
+    true_idx, _ = true_knn
+    recalls = []
+    for iters in (0, 1, 3):
+        cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=iters,
+                             window=32)
+        idx, _ = knn_lib.build_knn_graph(x, KEY, cfg)
+        recalls.append(knn_lib.knn_recall(idx, true_idx))
+    assert recalls[1] > recalls[0] + 0.1, recalls
+    assert recalls[2] > 0.9, recalls
+
+
+def test_explore_never_worsens(blobs, true_knn):
+    """Monotone invariant: merged top-k keeps current neighbors unless a
+    strictly closer candidate exists — recall cannot decrease."""
+    x, _ = blobs
+    true_idx, _ = true_knn
+    cfg = LargeVisConfig(n_neighbors=15, n_trees=2, n_explore_iters=0,
+                         window=16)
+    idx, dist = knn_lib.build_knn_graph(x, KEY, cfg)
+    r_prev = knn_lib.knn_recall(idx, true_idx)
+    for _ in range(2):
+        idx, dist = neighbor_explore(x, idx, dist, iters=1, key=KEY)
+        r = knn_lib.knn_recall(idx, true_idx)
+        assert r >= r_prev - 1e-6
+        r_prev = r
+
+
+def test_merge_candidates_dedup_and_self():
+    ids = jnp.array([[1, 1, 2, 0], [3, 2, 2, 1]], jnp.int32)
+    d = jnp.array([[1., 1., 2., 3.], [5., 1., 1., 2.]], jnp.float32)
+    self_idx = jnp.array([0, 1], jnp.int32)
+    mi, md = knn_lib.merge_candidates(ids, d, 2, self_idx=self_idx)
+    # row 0: self (0) suppressed, dup 1 suppressed -> [1, 2]
+    assert set(np.asarray(mi[0]).tolist()) == {1, 2}
+    # row 1: self (1) suppressed, dup 2 suppressed -> [2, 3]
+    assert set(np.asarray(mi[1]).tolist()) == {2, 3}
+
+
+def test_reverse_neighbors_contains_true_reverse():
+    idx = jnp.array([[1, 2], [2, 0], [0, 1], [0, 1]], jnp.int32)
+    rev = reverse_neighbors(idx, 4)
+    # node 0 is listed by 1, 2, 3
+    assert {1, 2, 3} <= set(np.asarray(rev[0]).tolist())
+
+
+def test_perplexity_calibration(blobs):
+    x, _ = blobs
+    idx, dist = knn_lib.brute_force_knn(x, 30)
+    p = perplexity.calibrate_p(dist, 10.0)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, atol=1e-4)
+    realized = perplexity.perplexity_of(p)
+    assert float(jnp.median(jnp.abs(realized - 10.0))) < 0.5
+
+
+def test_symmetrize_weight_symmetry(blobs):
+    """w_ij == w_ji whenever both directed edges exist."""
+    x, _ = blobs
+    idx, dist = knn_lib.brute_force_knn(x[:500], 10)
+    w = perplexity.edge_weights(idx, dist, 5.0)
+    idx_n, w_n = np.asarray(idx), np.asarray(w)
+    W = {}
+    for i in range(idx_n.shape[0]):
+        for k in range(idx_n.shape[1]):
+            W[(i, idx_n[i, k])] = w_n[i, k]
+    checked = 0
+    for (i, j), wij in W.items():
+        if (j, i) in W:
+            assert abs(wij - W[(j, i)]) < 1e-9
+            checked += 1
+    assert checked > 100
+
+
+def test_alias_sampler_distribution():
+    probs = np.array([0.1, 0.0, 0.4, 0.5])
+    thr, alias = sampler_lib.build_alias(probs)
+    idx = sampler_lib.sample_alias(KEY, jnp.asarray(thr), jnp.asarray(alias),
+                                   (200_000,))
+    freq = np.bincount(np.asarray(idx), minlength=4) / 200_000
+    np.testing.assert_allclose(freq, probs, atol=0.01)
+    assert freq[1] == 0.0
+
+
+def test_negative_sampler_power_law():
+    idx = jnp.array([[1], [0], [0], [0]], jnp.int32)   # node 0 high degree
+    w = jnp.ones((4, 1), jnp.float32)
+    ns = sampler_lib.build_negative_sampler(idx, w, power=0.75)
+    s = np.asarray(ns.sample(KEY, (100_000,)))
+    freq = np.bincount(s, minlength=4) / 100_000
+    # deg = [out 1 + in 3, 1+1, 1, 1] = [4, 2, 1, 1] -> ^0.75 normalized
+    want = np.array([4.0, 2.0, 1.0, 1.0]) ** 0.75
+    want /= want.sum()
+    np.testing.assert_allclose(freq, want, atol=0.01)
+
+
+def test_layout_separates_clusters(blobs):
+    """Paper C4 proxy: default hyper-params produce a layout whose 2D KNN
+    classifier beats chance by a wide margin."""
+    x, labels = blobs
+    cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=2,
+                         window=32, perplexity=10.0, samples_per_node=2000,
+                         batch_size=4096)
+    res = largevis(x, KEY, cfg)
+    acc = metrics.knn_classifier_accuracy(res.y, labels, k=5)
+    assert acc > 0.8, acc                                 # chance = 0.125
+    assert jnp.isfinite(res.y).all()
+
+
+def test_layout_gradient_direction():
+    """Attractive edges pull together; negatives push apart (Eqn 6 signs)."""
+    from repro.kernels.ref import largevis_grads_ref
+    yi = jnp.array([[0.0, 0.0]])
+    yj = jnp.array([[1.0, 0.0]])
+    yn = jnp.array([[[50.0, 50.0]]])       # far negative: repulsion ~ 0
+    gi, gj, gn = largevis_grads_ref(yi, yj, yn, neg_mask=jnp.ones((1, 1)))
+    step_i = yi - 0.1 * gi
+    assert jnp.linalg.norm(step_i - yj) < jnp.linalg.norm(yi - yj)
+    # the positive partner moves toward yi too
+    step_j = yj - 0.1 * gj
+    assert jnp.linalg.norm(step_j - yi) < jnp.linalg.norm(yj - yi)
+    # a CLOSE negative is pushed away from yi by its own step
+    yn_close = jnp.array([[[0.3, 0.3]]])
+    _, _, gn2 = largevis_grads_ref(yi, yj, yn_close,
+                                   neg_mask=jnp.ones((1, 1)))
+    step_n = yn_close - 0.1 * gn2
+    assert jnp.linalg.norm(step_n[0, 0] - yi[0]) > jnp.linalg.norm(
+        yn_close[0, 0] - yi[0])

@@ -1,0 +1,151 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import knn as knn_lib
+from repro.core import perplexity
+from repro.core import sampler as sampler_lib
+from repro.kernels import ref
+
+KEY = jax.random.key(42)
+COMMON = dict(deadline=None, max_examples=20)
+
+
+@settings(**COMMON)
+@given(m=st.integers(2, 40), n=st.integers(2, 40), d=st.integers(1, 30),
+       seed=st.integers(0, 2**20))
+def test_pairwise_sqdist_properties(m, n, d, seed):
+    """Nonnegative; zero iff identical rows; matches norm identity."""
+    k = jax.random.key(seed)
+    a = jax.random.normal(k, (m, d))
+    b = jax.random.normal(jax.random.fold_in(k, 1), (n, d))
+    D = np.asarray(ref.pairwise_sqdist_ref(a, b))
+    assert (D >= 0).all()
+    Dself = np.asarray(ref.pairwise_sqdist_ref(a, a))
+    np.testing.assert_allclose(np.diag(Dself), 0.0, atol=1e-4)
+    # symmetry of the self-distance matrix
+    np.testing.assert_allclose(Dself, Dself.T, atol=1e-4)
+
+
+@settings(**COMMON)
+@given(n=st.integers(3, 200), k=st.integers(1, 10), seed=st.integers(0, 99))
+def test_brute_force_knn_invariants(n, k, seed):
+    """No self edges; distances sorted ascending; ids in range."""
+    k = min(k, n - 1)
+    x = jax.random.normal(jax.random.key(seed), (n, 8))
+    idx, dist = knn_lib.brute_force_knn(x, k)
+    idx_n, d_n = np.asarray(idx), np.asarray(dist)
+    assert ((idx_n >= 0) & (idx_n < n)).all()
+    assert (idx_n != np.arange(n)[:, None]).all()
+    assert (np.diff(d_n, axis=1) >= -1e-4).all()
+
+
+@settings(**COMMON)
+@given(rows=st.integers(1, 20), c=st.integers(2, 30), k=st.integers(1, 8),
+       seed=st.integers(0, 99))
+def test_merge_candidates_invariants(rows, c, k, seed):
+    """Output has no duplicate ids per row (where real candidates exist)."""
+    k = min(k, c)
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, 50, (rows, c)), jnp.int32)
+    d = jnp.asarray(rng.random((rows, c)), jnp.float32)
+    mi, md = knn_lib.merge_candidates(ids, d, k)
+    mi_n, md_n = np.asarray(mi), np.asarray(md)
+    for r in range(rows):
+        real = mi_n[r][md_n[r] < 1e37]
+        assert len(set(real.tolist())) == len(real)
+    # chosen dists are the k smallest achievable over unique ids
+    assert (np.diff(md_n, axis=1) >= -1e-5).all()
+
+
+@settings(**COMMON)
+@given(n=st.integers(2, 500), seed=st.integers(0, 99))
+def test_alias_table_preserves_distribution(n, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.random(n) ** 2 + 1e-9
+    thr, alias = sampler_lib.build_alias(p)
+    # exact invariant of Vose construction: sum of slot masses == n normalized
+    mass = thr.copy().astype(np.float64)
+    np.add.at(mass, alias, 1.0 - thr)
+    np.testing.assert_allclose(mass, p / p.sum() * n, atol=1e-4)
+
+
+@settings(**COMMON)
+@given(n=st.integers(5, 60), k=st.integers(2, 10),
+       u=st.floats(1.5, 8.0), seed=st.integers(0, 99))
+def test_perplexity_rows_stochastic_and_on_target(n, k, u, seed):
+    k = min(k, n - 1)
+    u = min(u, k * 0.9)
+    x = jax.random.normal(jax.random.key(seed), (n, 6))
+    _, dist = knn_lib.brute_force_knn(x, k)
+    p = perplexity.calibrate_p(dist, u)
+    p_n = np.asarray(p)
+    np.testing.assert_allclose(p_n.sum(1), 1.0, atol=1e-3)
+    assert (p_n >= -1e-7).all()
+    realized = np.asarray(perplexity.perplexity_of(p))
+    # perplexity is achievable when u < k; allow boundary slack
+    assert np.median(np.abs(realized - u)) < max(0.25 * u, 0.5)
+
+
+@settings(**COMMON)
+@given(b=st.integers(1, 32), m=st.integers(1, 6), seed=st.integers(0, 99))
+def test_largevis_grad_clip_bound(b, m, seed):
+    """Per-coordinate clip bound holds for arbitrary geometry."""
+    k = jax.random.key(seed)
+    yi = jax.random.normal(k, (b, 2)) * 10
+    yj = jax.random.normal(jax.random.fold_in(k, 1), (b, 2)) * 10
+    yn = jax.random.normal(jax.random.fold_in(k, 2), (b, m, 2)) * 10
+    gi, gj, gn = ref.largevis_grads_ref(yi, yj, yn,
+                                        neg_mask=jnp.ones((b, m)))
+    for g in (gi, gj, gn):
+        assert float(jnp.abs(g).max()) <= 5.0 + 1e-6
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 99), scale=st.floats(0.1, 5.0))
+def test_rope_preserves_norm_and_relativity(seed, scale):
+    """RoPE is a rotation: preserves norms; q.k depends only on pos gap."""
+    from repro.models.layers import apply_rope
+    k = jax.random.key(seed)
+    x = jax.random.normal(k, (1, 8, 2, 16)) * scale
+    pos = jnp.arange(8)
+    r = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(r), axis=-1),
+                               rtol=2e-3)
+    # relative property: <r_p q, r_{p+g} k> == <r_0 q, r_g k>
+    q = jax.random.normal(jax.random.fold_in(k, 3), (1, 1, 1, 16))
+    kk = jax.random.normal(jax.random.fold_in(k, 4), (1, 1, 1, 16))
+    def dot_at(p, g):
+        rq = apply_rope(q, jnp.array([p]), 10000.0)
+        rk = apply_rope(kk, jnp.array([p + g]), 10000.0)
+        return float(jnp.sum(rq * rk))
+    np.testing.assert_allclose(dot_at(0, 3), dot_at(5, 3), rtol=2e-3,
+                               atol=1e-4)
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 99))
+def test_moe_combine_is_convex(seed):
+    """With topk=E and uniform router, MoE output == mean of expert FFNs."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.moe import init_moe, moe_apply
+    cfg = dataclasses.replace(get_config("mixtral-8x7b").reduced(),
+                              n_experts=2, topk_experts=2)
+    k = jax.random.key(seed)
+    p = init_moe(k, cfg)
+    p = dict(p, router=jnp.zeros_like(p["router"]))      # uniform routing
+    x = jax.random.normal(jax.random.fold_in(k, 1), (1, 8, cfg.d_model))
+    y, aux = moe_apply(p, x, cfg)
+    # manual average of both experts
+    outs = []
+    for e in range(2):
+        h = jax.nn.silu(x @ p["w_gate"][e]) * (x @ p["w_up"][e])
+        outs.append(h @ p["w_down"][e])
+    want = 0.5 * (outs[0] + outs[1])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-4)
+    # uniform routing: f_e = p_e = 1/E  =>  aux = E * E*(1/E^2) = 1
+    assert abs(float(aux) - 1.0) < 1e-5

@@ -1,0 +1,74 @@
+"""End-to-end behaviour tests for the paper's system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.largevis_default import LargeVisConfig
+from repro.core.largevis import largevis
+from repro.core.metrics import graph_recall, knn_classifier_accuracy
+from repro.data.synthetic import gaussian_mixture, mnist_like
+
+KEY = jax.random.key(0)
+
+
+def test_largevis_end_to_end_quality():
+    """The full paper pipeline with near-default params separates clusters:
+    C4's 'defaults work' property at test scale."""
+    x, labels = gaussian_mixture(KEY, 3000, 64, 10)
+    cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=2,
+                         window=32, perplexity=12.0, samples_per_node=3000,
+                         batch_size=4096)
+    res = largevis(x, KEY, cfg)
+    assert jnp.isfinite(res.y).all()
+    assert graph_recall(x, res.knn_idx) > 0.85
+    acc = knn_classifier_accuracy(res.y, labels, k=5)
+    assert acc > 0.85, acc
+
+
+def test_largevis_high_dim_input():
+    """784-dim (MNIST-shaped) input works through the same pipeline."""
+    x, labels = mnist_like(KEY, 1500, 784, 10)
+    cfg = LargeVisConfig(n_neighbors=10, n_trees=4, n_explore_iters=2,
+                         window=32, perplexity=8.0, samples_per_node=4000,
+                         batch_size=4096)
+    res = largevis(x, KEY, cfg)
+    acc = knn_classifier_accuracy(res.y, labels, k=5)
+    assert acc > 0.8, acc
+
+
+def test_train_loop_reduces_loss():
+    """A few hundred steps of the production driver reduce LM loss."""
+    from repro.launch.train import train
+    _, _, losses = train("xlstm-125m", steps=120, batch=8, seq=32,
+                         ckpt_dir="/tmp/test_sys_ckpt", resume=False,
+                         log_every=1000)
+    first = np.mean([l for _, l in losses[:5]])
+    last = np.mean([l for _, l in losses[-5:]])
+    assert last < first - 0.1, (first, last)
+
+
+def test_serve_engine_round_trip():
+    """Continuous-batching engine serves more requests than slots."""
+    from repro.configs import get_config
+    from repro.launch.serve import Request, ServeEngine
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    eng = ServeEngine(cfg, slots=2, max_len=48)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, 5).tolist(),
+                    max_new=4) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(len(r.out) >= 4 for r in reqs)
+    assert all(0 <= t < cfg.vocab_size for r in reqs for t in r.out)
+
+
+def test_largevis_deterministic_given_key():
+    x, _ = gaussian_mixture(KEY, 500, 16, 4)
+    cfg = LargeVisConfig(n_neighbors=8, n_trees=2, n_explore_iters=1,
+                         window=16, perplexity=5.0, samples_per_node=200,
+                         batch_size=1024)
+    y1 = largevis(x, jax.random.key(7), cfg).y
+    y2 = largevis(x, jax.random.key(7), cfg).y
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
