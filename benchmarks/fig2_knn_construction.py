@@ -5,10 +5,36 @@ vantage-point tree (the t-SNE baseline), NN-Descent (exploring from random
 init), LargeVis (forest init + exploring).  Each method sweeps its knob to
 trace a time/recall curve.  Expected (paper claim C2): LargeVis reaches the
 highest recall at the lowest time; vp-trees are the slowest at high d.
+
+Multi-device mode (``--devices P``): exposes P host CPU devices via
+``--xla_force_host_platform_device_count`` (parsed before any
+backend-touching import — see the early argparse block) and adds the
+sharded pipeline (`core/knn_sharded.py`) to the sweep next to its
+single-device counterpart.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import time
+
+_ARGS = None
+if __name__ == "__main__":
+    # parse BEFORE the imports below: repro modules build jnp constants at
+    # import time, which initializes the backend and freezes XLA_FLAGS
+    _ap = argparse.ArgumentParser(description=__doc__)
+    _ap.add_argument("--devices", type=int, default=0,
+                     help="expose this many host CPU devices and add the "
+                          "sharded-pipeline sweep (e.g. 8)")
+    _ap.add_argument("--sharded-only", action="store_true",
+                     help="skip the single-device method sweep")
+    _ARGS = _ap.parse_args()
+    if _ARGS.sharded_only and _ARGS.devices < 1:
+        _ap.error("--sharded-only requires --devices (e.g. --devices 8)")
+    if _ARGS.devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_ARGS.devices}")
 
 import jax
 import numpy as np
@@ -21,10 +47,37 @@ from repro.core.knn import brute_force_knn, build_knn_graph, knn_recall
 
 N = 6000
 K = 20
-KEY = jax.random.key(0)
+
+
+def run_sharded(rows: Rows, n_devices: int, *, include_single: bool = True):
+    """Sharded stage-1 sweep (+ the single-device arm for comparison when
+    `run()` did not already benchmark it on this fixture)."""
+    from repro.core.knn_sharded import build_knn_graph_sharded
+    from repro.launch.mesh import make_data_mesh
+    key = jax.random.key(0)
+    x, _ = dataset("blobs100", N, key)
+    true_idx, _ = brute_force_knn(x, K)
+    mesh = make_data_mesh(n_devices)
+    for nt in (2, 4, 8):
+        cfg = LargeVisConfig(n_neighbors=K, n_trees=nt, n_explore_iters=1,
+                             window=32, distributed=True)
+        (idx, _), secs = timed(build_knn_graph_sharded, x, key, cfg,
+                               mesh=mesh)
+        r = knn_recall(idx, true_idx)
+        rows.add(f"sharded{mesh.shape['data']}_nt{nt}", secs,
+                 recall=round(r, 4), method="largevis_sharded",
+                 devices=mesh.shape["data"])
+        if include_single:
+            cfg1 = LargeVisConfig(n_neighbors=K, n_trees=nt,
+                                  n_explore_iters=1, window=32)
+            (idx1, _), secs1 = timed(build_knn_graph, x, key, cfg1)
+            rows.add(f"single_nt{nt}", secs1,
+                     recall=round(knn_recall(idx1, true_idx), 4),
+                     method="largevis", devices=1)
 
 
 def run(rows: Rows):
+    KEY = jax.random.key(0)
     x, _ = dataset("blobs100", N, KEY)
     true_idx, _ = brute_force_knn(x, K)
 
@@ -64,6 +117,10 @@ def run(rows: Rows):
 
 if __name__ == "__main__":
     rows = Rows("fig2_knn_construction")
-    run(rows)
+    if not _ARGS.sharded_only:
+        run(rows)
+    if _ARGS.devices >= 1:
+        run_sharded(rows, _ARGS.devices,
+                    include_single=_ARGS.sharded_only)
     rows.print_csv()
     rows.save()

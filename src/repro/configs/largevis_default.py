@@ -25,6 +25,9 @@ class LargeVisConfig:
     rp_mode: str = "hash"           # "hash" (matmul, TPU-native) | "tree"
     perplexity: float = 50.0        # u in Eqn (1)
     perplexity_iters: int = 64      # bisection steps for sigma_i
+    # --- distributed graph construction (core/knn_sharded.py) ---
+    distributed: bool = False       # shard stage 1 over the "data" mesh axis
+    data_shards: int = 0            # devices in the 1-D mesh (0 = all)
     # --- layout (paper §3.2) ---
     out_dim: int = 2                # s
     n_negatives: int = 5            # M

@@ -16,6 +16,12 @@ with neighbor exploring.  Pointer-chasing trees don't map to TPU, so the
                    from global point pairs.
 
 Both produce per-tree candidates merged by a dedup'd top-k.
+
+Multi-device: `core/knn_sharded.py` builds the same graph with the point
+set sharded over the mesh "data" axis — per-shard codes, ring-streamed
+`pairwise_sqdist` candidate tiles with a running top-k (peak buffers
+(N/P, N/P), never (N, N)), and a sharded neighbor-exploring driver.
+`build_knn_graph` dispatches there when ``cfg.distributed`` is set.
 """
 from __future__ import annotations
 
@@ -82,10 +88,15 @@ def _auto_depth(n: int, leaf_target: int) -> int:
     return max(2, min(24, int(np.ceil(np.log2(max(n, 2) / leaf_target)))))
 
 
-def hash_codes(x: jax.Array, key, n_trees: int, depth: int) -> jax.Array:
-    """Sign-random-projection bucket codes: (N, n_trees) int32."""
-    d = x.shape[1]
-    proj = jax.random.normal(key, (d, n_trees * depth), jnp.float32)
+def hash_codes(x: jax.Array, key, n_trees: int, depth: int, *,
+               proj: jax.Array = None) -> jax.Array:
+    """Sign-random-projection bucket codes: (N, n_trees) int32.
+
+    ``proj`` (d, n_trees*depth) overrides the key-derived hyperplanes —
+    the sharded pipeline passes one shared matrix to every shard."""
+    if proj is None:
+        d = x.shape[1]
+        proj = jax.random.normal(key, (d, n_trees * depth), jnp.float32)
     bits = (x.astype(jnp.float32) @ proj) > 0.0          # (N, NT*D)
     bits = bits.reshape(x.shape[0], n_trees, depth)
     weights = (1 << jnp.arange(depth, dtype=jnp.int32))
@@ -176,8 +187,13 @@ def forest_knn(x: jax.Array, key, *, n_trees: int, depth: int, k: int,
 def build_knn_graph(x: jax.Array, key, cfg):
     """Full paper pipeline: forest init + neighbor exploring iterations.
 
-    Returns (idx (N,K) int32, sqdist (N,K) f32).
+    Returns (idx (N,K) int32, sqdist (N,K) f32).  With
+    ``cfg.distributed`` set, routes to the sharded multi-device pipeline
+    (`core/knn_sharded.py`).
     """
+    if getattr(cfg, "distributed", False):
+        from repro.core.knn_sharded import build_knn_graph_sharded
+        return build_knn_graph_sharded(x, key, cfg)
     from repro.core.neighbor_explore import neighbor_explore
     N = x.shape[0]
     k = min(cfg.n_neighbors, N - 1)

@@ -7,6 +7,11 @@
 Pipeline = the paper's two stages: (1) approximate KNN graph (projection
 forest + neighbor exploring + perplexity-calibrated weights), (2)
 probabilistic layout via edge-sampling SGD.
+
+``LargeVisConfig(distributed=True, data_shards=P)`` routes stage 1
+through the sharded multi-device pipeline (`core/knn_sharded.py`) — the
+point set is sharded over a 1-D "data" mesh and the graph is built with
+ring-streamed distance tiles (see README, "Multi-device on CPU").
 """
 from __future__ import annotations
 

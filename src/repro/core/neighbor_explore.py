@@ -8,6 +8,13 @@ C++ reference also builds reverse edges before exploring).  The per-node
 max-heap becomes a batched dedup'd top-k.  Work is tiled over nodes to
 bound the gather footprint; ``sample`` can cap candidate columns (0 = use
 all K^2, the paper-faithful default).
+
+``sharded_explore_round`` is the multi-device tile driver: it runs INSIDE
+a shard_map body (one tile of rows per shard), exchanges the KNN graph
+across shards (which is how each shard learns its rows' reverse
+neighbors), and fills candidate distances by streaming the point shards
+around the device ring — no shard ever holds more than its own (N/P, d)
+slab of points plus one in-flight remote slab.
 """
 from __future__ import annotations
 
@@ -55,6 +62,62 @@ def _tile_explore(x, knn_idx, knn_dist, rev, rows, key, sample: int):
     ids = jnp.concatenate([nbrs, cand], axis=1)
     ds = jnp.concatenate([knn_dist[rows], cd], axis=1)
     return knn_lib.merge_candidates(ids, ds, K, self_idx=rows)
+
+
+def sharded_explore_round(x_loc, ids_loc, knn_idx_loc, knn_dist_loc, *,
+                          axis: str, n_shards: int, n_real: int,
+                          key=None, sample: int = 0, r_cap: int = 0):
+    """One neighbor-exploring round for this shard's tile of rows.
+
+    Must be called inside a shard_map body over mesh axis ``axis``.
+
+    x_loc        (n_loc, d)   this shard's point slab
+    ids_loc      (n_loc,)     global ids of the slab (contiguous range)
+    knn_idx_loc  (n_loc, K)   current graph rows (global ids)
+    knn_dist_loc (n_loc, K)
+
+    The graph (N*K ints — output-sized, NOT a candidate buffer) is
+    all-gathered so each shard can read its rows' forward and reverse
+    neighbors; candidate *coordinates* are never gathered: distances are
+    filled over ``n_shards`` ring steps, each touching only the remote
+    (n_loc, d) slab currently held.  Returns merged (idx, dist) for the
+    local rows.
+    """
+    n_loc, K = knn_idx_loc.shape
+    r_cap = r_cap or K
+    perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+
+    # --- candidate ids from the exchanged graph -------------------------
+    g_idx = jax.lax.all_gather(knn_idx_loc, axis, tiled=True)   # (Np, K)
+    rev = reverse_neighbors(g_idx, r_cap)                       # (Np, r_cap)
+    rev_loc = jax.lax.dynamic_slice_in_dim(rev, ids_loc[0], n_loc)
+    fwd = g_idx[knn_idx_loc].reshape(n_loc, K * K)
+    cand = jnp.concatenate([fwd, rev_loc], axis=1)              # (n_loc, C)
+    if sample and sample < cand.shape[1]:
+        cols = jax.random.randint(key, (n_loc, sample), 0, cand.shape[1])
+        cand = jnp.take_along_axis(cand, cols, axis=1)
+    cand = jnp.where(cand >= n_real, ids_loc[:, None], cand)    # pad -> self
+
+    # --- ring pass: fill candidate distances from streamed slabs --------
+    def ring_step(_, carry):
+        cd, rx, roff = carry
+        rel = cand - roff
+        in_rng = (rel >= 0) & (rel < n_loc)
+        xc = rx[jnp.clip(rel, 0, n_loc - 1)]                    # (n_loc,C,d)
+        diff = (xc - x_loc[:, None, :]).astype(jnp.float32)
+        dd = jnp.sum(diff * diff, axis=-1)
+        cd = jnp.where(in_rng, dd, cd)
+        rx = jax.lax.ppermute(rx, axis, perm)
+        roff = jax.lax.ppermute(roff, axis, perm)
+        return cd, rx, roff
+
+    cd0 = jnp.full(cand.shape, knn_lib.INF, jnp.float32)
+    cd, _, _ = jax.lax.fori_loop(
+        0, n_shards, ring_step, (cd0, x_loc, ids_loc[0]))
+
+    ids = jnp.concatenate([knn_idx_loc, cand], axis=1)
+    ds = jnp.concatenate([knn_dist_loc, cd], axis=1)
+    return knn_lib.merge_candidates(ids, ds, K, self_idx=ids_loc)
 
 
 def neighbor_explore(x, knn_idx, knn_dist, *, iters: int = 1,

@@ -11,6 +11,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_data_mesh(data: int = 0):
+    """1-D "data" mesh for the sharded KNN pipeline (0 = all devices)."""
+    n = len(jax.devices())
+    data = n if data <= 0 else min(data, n)
+    return jax.make_mesh((data,), ("data",))
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())

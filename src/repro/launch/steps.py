@@ -16,6 +16,7 @@ from repro.configs import input_specs
 from repro.models import make_model, param_specs
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.runtime import sharding as sh
+from repro.runtime.compat import shard_map
 
 
 def _out_tree_shardings(out_specs, mesh, *, global_batch: int):
@@ -218,7 +219,7 @@ def make_largevis_step_local(mesh, *, n_nodes: int, n_edges: int,
             # merge replicas: average the deltas (one psum per H steps)
             return y0 + jax.lax.pmean(y - y0, dp)
 
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh,
             in_specs=(P(), P(), P(), P(dp), P(dp), P(dp), P(dp),
                       P(), P()),

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.models.layers import dense_init
 from repro.runtime import sharding as shd
+from repro.runtime.compat import shard_map
 
 
 def init_moe(key, cfg) -> dict:
@@ -118,7 +119,7 @@ def _moe_apply_sharded(params, x, cfg, capacity_factor, pol):
                 psum_axis="model")
         return y, jax.lax.pmean(aux, dp)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(r_spec, wg_spec, wg_spec, wd_spec, x_spec),
         out_specs=(x_spec, P()),

@@ -1,0 +1,26 @@
+"""Version-portability shims over the JAX API surface.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (<= 0.4.x,
+``check_rep=`` keyword) to ``jax.shard_map`` (>= 0.5, ``check_vma=``
+keyword).  Every multi-device code path in this repo (KNN pipeline,
+local-SGD layout, sharded layout step) goes through :func:`shard_map`
+below so the rest of the code is written once against the new calling
+convention and runs on either JAX.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` if available, else the experimental fallback.
+
+    Mirrors the modern keyword API; ``check_vma`` maps onto the old
+    ``check_rep`` flag (both gate the replication/varying-axes checker).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

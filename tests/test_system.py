@@ -12,6 +12,7 @@ from repro.data.synthetic import gaussian_mixture, mnist_like
 KEY = jax.random.key(0)
 
 
+@pytest.mark.slow
 def test_largevis_end_to_end_quality():
     """The full paper pipeline with near-default params separates clusters:
     C4's 'defaults work' property at test scale."""
@@ -26,6 +27,7 @@ def test_largevis_end_to_end_quality():
     assert acc > 0.85, acc
 
 
+@pytest.mark.slow
 def test_largevis_high_dim_input():
     """784-dim (MNIST-shaped) input works through the same pipeline."""
     x, labels = mnist_like(KEY, 1500, 784, 10)
@@ -37,6 +39,7 @@ def test_largevis_high_dim_input():
     assert acc > 0.8, acc
 
 
+@pytest.mark.slow
 def test_train_loop_reduces_loss():
     """A few hundred steps of the production driver reduce LM loss."""
     from repro.launch.train import train
