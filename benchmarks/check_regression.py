@@ -1,0 +1,90 @@
+"""Benchmark regression gate for the CI bench-smoke job.
+
+Compares a freshly produced ``BENCH_*.json`` artifact against the committed
+baseline under ``benchmarks/artifacts/`` and fails (exit 1) if the chosen
+metric regressed by more than ``--factor`` on any row present in both files
+(rows are matched by ``name``).  Rows missing the metric are skipped; zero
+overlapping rows is an error so a silent row rename cannot disable the gate.
+
+Usage (what .github/workflows/ci.yml runs):
+
+    python benchmarks/check_regression.py \
+        --fresh bench-fresh/BENCH_table2_layout_time.json \
+        --baseline benchmarks/artifacts/BENCH_table2_layout_time.json \
+        --metric us_per_edge_sample --factor 2.0
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    rows = json.loads(pathlib.Path(path).read_text())
+    return {r["name"]: r for r in rows}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True, help="artifact from this run")
+    ap.add_argument("--baseline", required=True, help="committed baseline")
+    ap.add_argument("--metric", default="us_per_edge_sample")
+    ap.add_argument("--factor", type=float, default=2.0)
+    ap.add_argument(
+        "--rows",
+        default="",
+        help="only gate rows whose name contains this substring (e.g. "
+        "'layout_scan' to skip the dispatch-bound loop rows, whose "
+        "wall-clock is the most machine-sensitive)",
+    )
+    args = ap.parse_args()
+
+    fresh = load_rows(args.fresh)
+    baseline = load_rows(args.baseline)
+
+    compared, failures = 0, []
+    for name, base_row in sorted(baseline.items()):
+        if args.rows and args.rows not in name:
+            continue
+        if args.metric not in base_row or name not in fresh:
+            continue
+        if args.metric not in fresh[name]:
+            continue
+        base_v = float(base_row[args.metric])
+        fresh_v = float(fresh[name][args.metric])
+        if base_v <= 0:
+            continue
+        ratio = fresh_v / base_v
+        compared += 1
+        verdict = "REGRESSED" if ratio > args.factor else "ok"
+        print(
+            f"{name}: {args.metric} baseline={base_v:.4f} "
+            f"fresh={fresh_v:.4f} ratio={ratio:.2f}x [{verdict}]"
+        )
+        if ratio > args.factor:
+            failures.append((name, ratio))
+
+    if compared == 0:
+        print(
+            f"ERROR: no rows with metric '{args.metric}' overlap between "
+            f"{args.fresh} and {args.baseline} — the gate compared nothing",
+            file=sys.stderr,
+        )
+        return 1
+    if failures:
+        worst = max(r for _, r in failures)
+        print(
+            f"FAIL: {len(failures)}/{compared} rows regressed more than "
+            f"{args.factor}x (worst {worst:.2f}x)",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"PASS: {compared} rows within {args.factor}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,13 +1,23 @@
-"""Shared benchmark utilities: datasets, timing, CSV rows."""
+"""Shared benchmark utilities: datasets, timing, CSV rows.
+
+Artifacts are written as ``BENCH_<table>.json`` under
+``benchmarks/artifacts/`` (override the directory with the
+``BENCH_ARTIFACTS_DIR`` env var — the CI bench-smoke job writes fresh
+artifacts next to the checkout and gates them against the committed
+baselines; see benchmarks/README.md for the JSON contract).
+"""
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import time
 
 import jax
 
-ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+ART = pathlib.Path(os.environ.get(
+    "BENCH_ARTIFACTS_DIR",
+    pathlib.Path(__file__).resolve().parent / "artifacts"))
 
 
 def dataset(name: str, n: int, key=None):
@@ -24,10 +34,19 @@ def dataset(name: str, n: int, key=None):
     raise KeyError(name)
 
 
-def timed(fn, *args, repeats: int = 1, **kw):
-    """(result, best_seconds) with jax block_until_ready."""
-    best = float("inf")
+def timed(fn, *args, repeats: int = 1, warmup: int = 1, **kw):
+    """(result, best_seconds) with jax block_until_ready.
+
+    ``warmup`` untimed calls run first so jit compilation never lands in
+    the timed repeats — with the old behaviour every ``repeats=1`` number
+    (all of fig2–fig7) measured compile time, not runtime.  Pass
+    ``warmup=0`` only when compilation is the thing being measured.
+    """
     out = None
+    for _ in range(max(0, warmup)):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    best = float("inf")
     for _ in range(repeats):
         t0 = time.time()
         out = fn(*args, **kw)
@@ -53,7 +72,7 @@ class Rows:
 
     def save(self):
         ART.mkdir(parents=True, exist_ok=True)
-        path = ART / f"{self.table}.json"
+        path = ART / f"BENCH_{self.table}.json"
         path.write_text(json.dumps(
             [dict(name=n, us=u, **d) for n, u, d in self.rows], indent=1))
         return path

@@ -28,6 +28,8 @@ if __name__ == "__main__":
                           "sharded-pipeline sweep (e.g. 8)")
     _ap.add_argument("--sharded-only", action="store_true",
                      help="skip the single-device method sweep")
+    _ap.add_argument("--tiny", action="store_true",
+                     help="CI bench-smoke mode: small N, reduced sweeps")
     _ARGS = _ap.parse_args()
     if _ARGS.sharded_only and _ARGS.devices < 1:
         _ap.error("--sharded-only requires --devices (e.g. --devices 8)")
@@ -76,13 +78,13 @@ def run_sharded(rows: Rows, n_devices: int, *, include_single: bool = True):
                      method="largevis", devices=1)
 
 
-def run(rows: Rows):
+def run(rows: Rows, *, n: int = N, tree_sweep=(2, 4, 8)):
     KEY = jax.random.key(0)
-    x, _ = dataset("blobs100", N, KEY)
+    x, _ = dataset("blobs100", n, KEY)
     true_idx, _ = brute_force_knn(x, K)
 
     # --- LargeVis: forest + 1 exploring iteration, sweep trees ---
-    for nt in (2, 4, 8):
+    for nt in tree_sweep:
         cfg = LargeVisConfig(n_neighbors=K, n_trees=nt, n_explore_iters=1,
                              window=32)
         (idx, _), secs = timed(build_knn_graph, x, KEY, cfg)
@@ -90,7 +92,7 @@ def run(rows: Rows):
         rows.add(f"largevis_nt{nt}", secs, recall=round(r, 4), method="largevis")
 
     # --- RP forest alone (no exploring), sweep trees ---
-    for nt in (4, 8, 16):
+    for nt in tuple(2 * t for t in tree_sweep):
         cfg = LargeVisConfig(n_neighbors=K, n_trees=nt, n_explore_iters=0,
                              window=32)
         (idx, _), secs = timed(build_knn_graph, x, KEY, cfg)
@@ -106,21 +108,35 @@ def run(rows: Rows):
                  method="nn_descent")
 
     # --- vp-tree (host numpy; queries a subset, extrapolated) ---
-    n_q = 400
+    n_q = min(400, n // 4)
     t0 = time.time()
     got = vptree_knn(np.asarray(x), K, eps=0.0, n_query=n_q)
-    secs = (time.time() - t0) * (N / n_q)
+    secs = (time.time() - t0) * (n / n_q)
     matches = (got[:, :, None] == np.asarray(true_idx)[:n_q, None, :]).any(-1)
     rows.add("vptree_exact", secs, recall=round(float(matches.mean()), 4),
              method="vptree", extrapolated_from=n_q)
 
 
+def run_tiny(rows: Rows):
+    """CI bench-smoke mode: same sweep structure at N=1500.
+
+    Must be given a ``Rows("fig2_knn_construction_tiny")`` — row names are
+    a stable interface matched across runs (benchmarks/README.md), and the
+    tiny workload's timings are not comparable to the full N=6000 rows.
+    """
+    run(rows, n=1500, tree_sweep=(2, 4))
+
+
 if __name__ == "__main__":
-    rows = Rows("fig2_knn_construction")
-    if not _ARGS.sharded_only:
-        run(rows)
-    if _ARGS.devices >= 1:
-        run_sharded(rows, _ARGS.devices,
-                    include_single=_ARGS.sharded_only)
+    if _ARGS.tiny:
+        rows = Rows("fig2_knn_construction_tiny")
+        run_tiny(rows)
+    else:
+        rows = Rows("fig2_knn_construction")
+        if not _ARGS.sharded_only:
+            run(rows)
+        if _ARGS.devices >= 1:
+            run_sharded(rows, _ARGS.devices,
+                        include_single=_ARGS.sharded_only)
     rows.print_csv()
     rows.save()

@@ -8,7 +8,6 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import Rows, dataset, timed
-from repro.configs.largevis_default import LargeVisConfig
 from repro.core.knn import brute_force_knn, forest_knn, knn_recall
 from repro.core.neighbor_explore import neighbor_explore
 

@@ -1,22 +1,92 @@
-"""Paper Table 2: graph-visualization wall time, LargeVis vs t-SNE.
+"""Paper Table 2: graph-visualization wall time, LargeVis vs t-SNE —
+plus the layout-engine dispatch benchmark (per-step loop vs scan-fused).
 
-At container scale the comparison is per-(edge-sample|gradient-iteration)
-throughput plus total wall time on equal sample budgets; the paper's
-headline (LargeVis ~7x faster at millions of nodes) comes from O(N) vs
-O(N log N) — fig6 measures the scaling directly."""
+At container scale the paper comparison is per-(edge-sample|gradient-
+iteration) throughput plus total wall time on equal sample budgets; the
+paper's headline (LargeVis ~7x faster at millions of nodes) comes from
+O(N) vs O(N log N) — fig6 measures the scaling directly.
+
+The engine rows (``layout_loop_n*`` / ``layout_scan_n*``) time the SAME
+sample budget through the per-step Python driver (one device dispatch
+per SGD step) and the scan-fused engine (``core/layout_engine.py``,
+``steps_per_dispatch`` steps per dispatch).  They run in the small-batch
+regime (batch 256) where dispatch overhead dominates — the regime the
+paper's linear-time layout optimizes — on a synthetic random KNN graph,
+since the engine benchmark measures stepping, not graph quality.  The
+``us_per_edge_sample`` field of the scan rows is the perf-trajectory
+metric the CI bench-smoke gate regresses against
+(benchmarks/check_regression.py).
+
+``--tiny`` runs only the N=2000 engine comparison (the CI smoke mode).
+"""
 from __future__ import annotations
 
+import argparse
+import dataclasses
+
 import jax
+import numpy as np
 
 from benchmarks.common import Rows, dataset, timed
 from repro.configs.largevis_default import LargeVisConfig
-from repro.core.baselines.tsne import tsne_layout
-from repro.core.largevis import build_graph, layout_graph
+from repro.core import sampler as sampler_lib
+from repro.core.layout import run_layout
 
 KEY = jax.random.key(4)
 
+# engine-comparison grid: N -> samples_per_node, at batch 256 (dispatch-
+# bound small-batch regime; equal budgets for both drivers)
+ENGINE_NS = (2_000, 20_000, 100_000)
+ENGINE_SPN = {2_000: 256, 20_000: 64, 100_000: 16}
+ENGINE_BATCH = 256
+ENGINE_STEPS_PER_DISPATCH = 100
+
+
+def _synthetic_graph_samplers(n: int, k: int = 10, seed: int = 0):
+    """Random directed KNN graph + weights — stage-2 stepping fixture."""
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, n, (n, k)).astype(np.int32)
+    w = rng.uniform(0.5, 1.5, (n, k)).astype(np.float32)
+    es = sampler_lib.build_edge_sampler(idx, w)
+    ns = sampler_lib.build_negative_sampler(idx, w)
+    return es, ns
+
+
+def engine_rows(rows: Rows, ns=ENGINE_NS):
+    """Per-step loop vs scan-fused engine on equal sample budgets."""
+    for n in ns:
+        es, neg = _synthetic_graph_samplers(n)
+        base = LargeVisConfig(samples_per_node=ENGINE_SPN[n],
+                              batch_size=ENGINE_BATCH)
+        cfg_loop = dataclasses.replace(base, steps_per_dispatch=1)
+        cfg_scan = dataclasses.replace(
+            base, steps_per_dispatch=ENGINE_STEPS_PER_DISPATCH)
+
+        def run_blocked(cfg):
+            # LayoutResult is not a pytree, so block on .y explicitly —
+            # otherwise async dispatch escapes the timer
+            r = run_layout(KEY, es, neg, n, cfg)
+            jax.block_until_ready(r.y)
+            return r
+
+        r_loop, secs_loop = timed(run_blocked, cfg_loop, repeats=2)
+        r_scan, secs_scan = timed(run_blocked, cfg_scan, repeats=2)
+        rows.add(f"layout_loop_n{n}", secs_loop,
+                 steps=r_loop.steps, edge_samples=r_loop.edge_samples,
+                 dispatches=r_loop.steps,
+                 us_per_edge_sample=round(
+                     secs_loop * 1e6 / r_loop.edge_samples, 4))
+        rows.add(f"layout_scan_n{n}", secs_scan,
+                 steps=r_scan.steps, edge_samples=r_scan.edge_samples,
+                 dispatches=-(-r_scan.steps // ENGINE_STEPS_PER_DISPATCH),
+                 us_per_edge_sample=round(
+                     secs_scan * 1e6 / r_scan.edge_samples, 4),
+                 speedup_vs_loop=round(secs_loop / max(secs_scan, 1e-9), 2))
+
 
 def run(rows: Rows):
+    from repro.core.baselines.tsne import tsne_layout
+    from repro.core.largevis import build_graph, layout_graph
     for n in (1500, 3000):
         x, _ = dataset("blobs100", n, KEY)
         cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=1,
@@ -31,10 +101,21 @@ def run(rows: Rows):
         rows.add(f"tsne_n{n}", secs_t, iters=250,
                  sec_per_iter=round(secs_t / 250, 5),
                  speedup_largevis=round(secs_t / max(secs, 1e-9), 2))
+    engine_rows(rows)
+
+
+def run_tiny(rows: Rows):
+    """CI bench-smoke mode: N=2000 engine comparison only (same config as
+    the full run's n2000 rows, so the committed baseline stays valid)."""
+    engine_rows(rows, ns=(2_000,))
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="engine comparison at N=2000 only (CI smoke mode)")
+    args = ap.parse_args()
     rows = Rows("table2_layout_time")
-    run(rows)
+    (run_tiny if args.tiny else run)(rows)
     rows.print_csv()
     rows.save()

@@ -9,7 +9,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
 from repro.configs.largevis_default import LargeVisConfig
 from repro.core.largevis import largevis
 from repro.launch.train import train

@@ -19,12 +19,10 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs.largevis_default import LargeVisConfig
 from repro.core import sampler as S
 from repro.core.largevis import build_graph
-from repro.core.layout import LayoutResult, layout_step
+from repro.core.layout import run_layout
 from repro.core.metrics import graph_recall, knn_classifier_accuracy
 from repro.data.synthetic import mnist_like
 from repro.runtime.fault_tolerance import Watchdog
-
-import jax.numpy as jnp
 
 
 def main():
@@ -52,31 +50,33 @@ def main():
     mgr = CheckpointManager(args.ckpt, save_every=200)
     dog = Watchdog()
 
-    total = cfg.samples_per_node * args.n
-    steps = max(1, total // cfg.batch_size)
     state, start = mgr.resume()
-    y = state["y"] if state else (
-        jax.random.normal(key, (args.n, cfg.out_dim)) * cfg.init_scale)
+    y0 = state["y"] if state else None
 
-    kwargs = dict(edge_src=es.src, edge_dst=es.dst, edge_thr=es.threshold,
-                  edge_alias=es.alias, neg_thr=ns.threshold,
-                  neg_alias=ns.alias, n_negatives=cfg.n_negatives,
-                  n_nodes=args.n, prob_fn=cfg.prob_fn, a=cfg.prob_a,
-                  gamma=cfg.gamma, clip=cfg.grad_clip, rho0=cfg.rho0,
-                  batch=cfg.batch_size)
+    # run_layout's scan-fused path: cfg.steps_per_dispatch steps per device
+    # dispatch (donated y buffer); on_chunk fires at every chunk boundary —
+    # the checkpoint / watchdog / progress tick.  Saves use a distance
+    # check, not step % save_every, so any steps_per_dispatch cadence works.
     t0 = time.time()
-    for t in range(start, steps):
-        ts = time.time()
-        y = layout_step(y, jax.random.fold_in(key, t),
-                        jnp.float32(t / steps), **kwargs)
-        dog.observe(t, time.time() - ts)
-        mgr.maybe_save(t + 1, {"y": y})
-        if t % max(1, steps // 10) == 0:
-            print(f"  step {t}/{steps} "
-                  f"({cfg.batch_size*(t+1-start)/(time.time()-t0):,.0f} "
-                  f"edge samples/s)")
+    prog = {"last": t0, "saved": start}
+    res_batch = min(cfg.batch_size, args.n // 2)    # the collision cap
+
+    def on_chunk(t, steps, y):
+        now = time.time()
+        dog.observe(t, now - prog["last"])
+        prog["last"] = now
+        if t - prog["saved"] >= mgr.save_every or t >= steps:
+            mgr.save_now(t, {"y": y})
+            prog["saved"] = t
+        if t % max(1, (steps // 10)) < cfg.steps_per_dispatch:
+            rate = (t - start) * res_batch / max(now - t0, 1e-9)
+            print(f"  step {t}/{steps} ({rate:,.0f} edge samples/s)")
+
+    res = run_layout(key, es, ns, args.n, cfg, y0=y0, start_step=start,
+                     on_chunk=on_chunk)
+    y = res.y
     acc = knn_classifier_accuracy(y, labels, k=5)
-    print(f"layout done: {steps} steps, {steps*cfg.batch_size:,} edge "
+    print(f"layout done: {res.steps} steps, {res.edge_samples:,} edge "
           f"samples, 2D KNN accuracy {acc:.3f} (chance 0.1)")
     if dog.stragglers:
         print(f"straggler steps flagged: {len(dog.stragglers)}")

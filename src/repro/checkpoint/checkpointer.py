@@ -20,7 +20,7 @@ import os
 import pathlib
 import shutil
 import time
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

@@ -4,7 +4,7 @@ from __future__ import annotations
 import dataclasses
 import pathlib
 import time
-from typing import Any, Optional
+from typing import Optional
 
 from repro.checkpoint import checkpointer as ckpt
 

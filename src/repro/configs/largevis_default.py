@@ -38,6 +38,9 @@ class LargeVisConfig:
     prob_a: float = 1.0
     grad_clip: float = 5.0          # reference-impl per-coordinate clip
     batch_size: int = 4096          # edge samples per device step (TPU adapt)
+    steps_per_dispatch: int = 100   # scan-fused steps per device dispatch
+    #   (core/layout_engine.py); <=1 falls back to the per-step Python loop
+    #   (debug / visual-progress mode — ~dispatch-bound at small N)
     sync_every: int = 1             # H: local-SGD sync period (1 = sync SGD)
     init_scale: float = 1e-4        # initial layout ~ N(0, init_scale)
     neg_power: float = 0.75         # P_n(j) ∝ d_j^0.75

@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.neighbor_explore import neighbor_explore
-from repro.kernels import ops
 
 
 def random_knn_init(x, k: int, key):

@@ -12,12 +12,17 @@ probabilistic layout via edge-sampling SGD.
 through the sharded multi-device pipeline (`core/knn_sharded.py`) — the
 point set is sharded over a 1-D "data" mesh and the graph is built with
 ring-streamed distance tiles (see README, "Multi-device on CPU").
+
+Stage 2 steps through the scan-fused layout engine
+(`core/layout_engine.py`): ``cfg.steps_per_dispatch`` SGD steps per
+device dispatch with a donated coordinate buffer.  Passing a
+``callback`` selects the per-step Python loop (one dispatch per step)
+so progress can be observed mid-layout.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,6 +10,11 @@ TPU analogue of Hogwild staleness (DESIGN.md §2).
 
 lr schedule: rho_t = rho0 * (1 - t/T), batch-size-corrected; per-coordinate
 gradient clip as in the reference implementation.
+
+Stepping goes through ``core/layout_engine.py``: ``run_layout`` dispatches
+``cfg.steps_per_dispatch`` scanned steps per device round trip (donated y
+buffer, no per-step host sync); the per-step Python loop survives only for
+visual-progress callbacks and as ``steps_per_dispatch<=1`` debug mode.
 """
 from __future__ import annotations
 
@@ -21,45 +26,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import objective
-from repro.core.sampler import EdgeSampler, NodeSampler, sample_alias
-from repro.kernels import ops
+from repro.core import layout_engine
+from repro.core.layout_engine import sgd_edge_step
+from repro.core.sampler import EdgeSampler, NodeSampler
 from repro.runtime.compat import shard_map
 
 
 @functools.partial(
     jax.jit, donate_argnums=(0,),
-    static_argnames=("n_negatives", "prob_fn", "a", "gamma", "clip",
-                     "n_nodes", "batch"))
-def layout_step(y, key, t_frac, *, edge_src, edge_dst, edge_thr, edge_alias,
-                neg_thr, neg_alias, n_negatives: int, n_nodes: int,
-                prob_fn: str = "inv_quadratic", a: float = 1.0,
-                gamma: float = 7.0, clip: float = 5.0, rho0: float = 1.0,
-                batch: int = 4096):
-    """One SGD step over a freshly sampled edge batch.  t_frac = t/T."""
-    ke, kn, kb = jax.random.split(key, 3)
-    e = sample_alias(ke, edge_thr, edge_alias, (batch,))
-    i, j = edge_src[e], edge_dst[e]
-    negs = sample_alias(kn, neg_thr, neg_alias, (batch, n_negatives))
-    # mask collisions: negative == source or target of the positive edge
-    neg_mask = ((negs != i[:, None]) & (negs != j[:, None])).astype(
-        jnp.float32)
+    static_argnames=layout_engine.STATIC_ARGNAMES)
+def layout_step(y, key, t_frac, **kw):
+    """One jitted SGD step (see ``layout_engine.sgd_edge_step``).
 
-    yi, yj, yneg = y[i], y[j], y[negs]
-    if prob_fn == "inv_quadratic":
-        gi, gj, gneg = ops.largevis_grads(yi, yj, yneg, neg_mask, gamma=gamma,
-                                          a=a, clip=clip)
-    else:
-        gi, gj, gneg = objective.grads_autodiff(yi, yj, yneg, neg_mask,
-                                                prob_fn=prob_fn, a=a,
-                                                gamma=gamma, clip=clip)
-    lr = rho0 * jnp.maximum(1.0 - t_frac, 1e-4)
-    # single fused scatter-add (3 separate .at[].add calls triple the
-    # y read/write traffic — §Perf hillclimb 3 iter 2)
-    s = y.shape[1]
-    idx = jnp.concatenate([i, j, negs.reshape(-1)])
-    upd = jnp.concatenate([gi, gj, gneg.reshape(-1, s)], axis=0)
-    return y.at[idx].add(-lr * upd)
+    Per-step dispatch entry point — kept for the callback/visual-progress
+    driver and external single-step users; bulk stepping should go through
+    ``layout_engine.layout_chunk``, which runs H of these per dispatch.
+    """
+    return sgd_edge_step(y, key, t_frac, **kw)
 
 
 @dataclasses.dataclass
@@ -83,6 +66,18 @@ def _collision_capped_batch(batch_size: int, n_nodes: int,
     return min(batch_size, cap)
 
 
+def _step_kwargs(edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
+                 n_nodes: int, cfg, batch: int) -> dict:
+    """The sgd_edge_step keyword bundle shared by every driver below."""
+    return dict(
+        edge_src=edge_sampler.src, edge_dst=edge_sampler.dst,
+        edge_thr=edge_sampler.threshold, edge_alias=edge_sampler.alias,
+        neg_thr=neg_sampler.threshold, neg_alias=neg_sampler.alias,
+        n_negatives=cfg.n_negatives, n_nodes=n_nodes, prob_fn=cfg.prob_fn,
+        a=cfg.prob_a, gamma=cfg.gamma, clip=cfg.grad_clip, rho0=cfg.rho0,
+        batch=batch)
+
+
 # ---------------------------------------------------------------------------
 # Local-SGD multi-device mode (the TPU analogue of the paper's Hogwild)
 # ---------------------------------------------------------------------------
@@ -96,11 +91,16 @@ def make_local_sgd_fns(mesh, cfg, n_nodes: int, *, batch: int):
     psum-averages — the paper's "conflicting updates are rare on sparse
     graphs" argument, made explicit: replicas drift for H steps and the
     drift is averaged away.  H=1 degenerates to synchronous data-parallel.
+
+    The H local steps are one ``layout_engine.scan_layout_steps`` scan per
+    shard_map body (formerly a hand-rolled ``fori_loop`` over the jitted
+    per-step fn — same dynamics, one compiled loop instead of H inlined
+    step bodies).
     """
     from jax.sharding import PartitionSpec as P
-    n_dev = mesh.shape["data"]
     dp_spec = P("data", None, None)
     rep = P()
+    H = max(1, cfg.sync_every)
 
     def local_steps(y_rep, seed, t_frac0, dt_frac, edge_src, edge_dst,
                     edge_thr, edge_alias, neg_thr, neg_alias):
@@ -109,21 +109,16 @@ def make_local_sgd_fns(mesh, cfg, n_nodes: int, *, batch: int):
         def body(y_loc, seed, t_frac0, dt_frac, edge_src, edge_dst,
                  edge_thr, edge_alias, neg_thr, neg_alias):
             dev = jax.lax.axis_index("data")
-            y = y_loc[0]
-
-            def one(i, y):
-                key = jax.random.fold_in(
-                    jax.random.fold_in(jax.random.key(seed[0]), dev), i)
-                return layout_step(
-                    y, key, t_frac0 + dt_frac * i.astype(jnp.float32),
-                    edge_src=edge_src, edge_dst=edge_dst, edge_thr=edge_thr,
-                    edge_alias=edge_alias, neg_thr=neg_thr,
-                    neg_alias=neg_alias, n_negatives=cfg.n_negatives,
-                    n_nodes=n_nodes, prob_fn=cfg.prob_fn, a=cfg.prob_a,
-                    gamma=cfg.gamma, clip=cfg.grad_clip, rho0=cfg.rho0,
-                    batch=batch)
-
-            y = jax.lax.fori_loop(0, cfg.sync_every, one, y)
+            base_key = jax.random.fold_in(jax.random.key(seed[0]), dev)
+            step_ids = jnp.arange(H, dtype=jnp.int32)
+            t_fracs = t_frac0 + dt_frac * step_ids.astype(jnp.float32)
+            y = layout_engine.scan_layout_steps(
+                y_loc[0], base_key, step_ids, t_fracs,
+                edge_src=edge_src, edge_dst=edge_dst, edge_thr=edge_thr,
+                edge_alias=edge_alias, neg_thr=neg_thr, neg_alias=neg_alias,
+                n_negatives=cfg.n_negatives, n_nodes=n_nodes,
+                prob_fn=cfg.prob_fn, a=cfg.prob_a, gamma=cfg.gamma,
+                clip=cfg.grad_clip, rho0=cfg.rho0, batch=batch)
             return y[None]
 
         return shard_map(
@@ -142,7 +137,7 @@ def make_local_sgd_fns(mesh, cfg, n_nodes: int, *, batch: int):
         return shard_map(body, mesh=mesh, in_specs=dp_spec,
                          out_specs=dp_spec, check_vma=False)(y_rep)
 
-    return jax.jit(local_steps), jax.jit(sync)
+    return jax.jit(local_steps, donate_argnums=(0,)), jax.jit(sync)
 
 
 def run_layout_local_sgd(key, edge_sampler: EdgeSampler,
@@ -180,24 +175,54 @@ def run_layout_local_sgd(key, edge_sampler: EdgeSampler,
 
 def run_layout(key, edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
                n_nodes: int, cfg, *,
-               callback: Optional[Callable] = None) -> LayoutResult:
-    """Drive layout_step for T = samples_per_node * N edge samples."""
+               callback: Optional[Callable] = None,
+               y0=None, start_step: int = 0,
+               on_chunk: Optional[Callable] = None) -> LayoutResult:
+    """Drive the layout for T = samples_per_node * N edge samples.
+
+    Default path: ``layout_engine.layout_chunk`` — H =
+    ``cfg.steps_per_dispatch`` scanned steps per device dispatch with a
+    donated y buffer.  A ``callback`` (visual progress) or
+    ``steps_per_dispatch <= 1`` requests the per-step Python loop, which
+    produces the identical trajectory one host round trip per step.
+
+    Resume: pass ``y0`` (e.g. a checkpointed layout) and ``start_step``;
+    the schedule (key stream, t/T lr positions) continues exactly where
+    step ``start_step`` would have run.  ``on_chunk(t, steps, y)`` fires
+    after every dispatch on the scanned path with ``y`` synced — the
+    checkpoint/watchdog/progress hook for chunked drivers.
+    """
     ky, kr = jax.random.split(key)
-    y = (jax.random.normal(ky, (n_nodes, cfg.out_dim), jnp.float32)
-         * cfg.init_scale)
+    if y0 is None:
+        y = (jax.random.normal(ky, (n_nodes, cfg.out_dim), jnp.float32)
+             * cfg.init_scale)
+    else:
+        y = jnp.asarray(y0, jnp.float32)
     total = int(cfg.samples_per_node) * n_nodes
     batch = _collision_capped_batch(cfg.batch_size, n_nodes, total)
     steps = max(1, total // batch)
-    kwargs = dict(
-        edge_src=edge_sampler.src, edge_dst=edge_sampler.dst,
-        edge_thr=edge_sampler.threshold, edge_alias=edge_sampler.alias,
-        neg_thr=neg_sampler.threshold, neg_alias=neg_sampler.alias,
-        n_negatives=cfg.n_negatives, n_nodes=n_nodes, prob_fn=cfg.prob_fn,
-        a=cfg.prob_a, gamma=cfg.gamma, clip=cfg.grad_clip, rho0=cfg.rho0,
-        batch=batch)
-    for t in range(steps):
-        y = layout_step(y, jax.random.fold_in(kr, t),
-                        jnp.float32(t / steps), **kwargs)
-        if callback is not None and (t % max(1, steps // 20) == 0):
-            callback(t, steps, y)
-    return LayoutResult(y=y, steps=steps, edge_samples=steps * batch)
+    start = min(int(start_step), steps)
+    kwargs = _step_kwargs(edge_sampler, neg_sampler, n_nodes, cfg, batch)
+
+    H = int(getattr(cfg, "steps_per_dispatch", 0))
+    if callback is None and H > 1:
+        t = start
+        while t < steps:
+            h = min(H, steps - t)
+            step_ids = jnp.arange(t, t + h, dtype=jnp.int32)
+            # host-side t/steps (f64 rounded to f32) — bit-identical to the
+            # Python loop's jnp.float32(t / steps) schedule
+            t_fracs = jnp.asarray(np.arange(t, t + h) / steps, jnp.float32)
+            y = layout_engine.layout_chunk(y, kr, step_ids, t_fracs, **kwargs)
+            t += h
+            if on_chunk is not None:
+                jax.block_until_ready(y)
+                on_chunk(t, steps, y)
+    else:
+        for t in range(start, steps):
+            y = layout_step(y, jax.random.fold_in(kr, t),
+                            jnp.float32(t / steps), **kwargs)
+            if callback is not None and (t % max(1, steps // 20) == 0):
+                callback(t, steps, y)
+    done = steps - start
+    return LayoutResult(y=y, steps=done, edge_samples=done * batch)

@@ -1,0 +1,166 @@
+"""Scan-fused layout engine: H SGD steps per device dispatch (paper §3.2).
+
+The layout stage is the paper's linear-time hot path, and a per-step Python
+driver re-dispatches one jitted ``layout_step`` per SGD step — at the
+collision-capped batch sizes (≤ N/2) that is thousands of host round trips,
+so dispatch overhead dominates exactly the regime the paper optimizes.  This
+module fuses the loop into the compiled program:
+
+* :func:`sgd_edge_step` — the single-step body (alias edge/negative sampling
+  + fused gradient + one scatter-add), shared by every driver so the scanned
+  and per-step paths stay numerically identical.
+* :func:`scan_layout_steps` — ``jax.lax.scan`` over the step body.  Used
+  unjitted inside ``shard_map`` by the local-SGD drivers (replacing their
+  hand-rolled ``fori_loop`` wiring) and jitted below for the single-device
+  driver.
+* :func:`layout_chunk` — the jitted, **y-donating** dispatch unit: one device
+  round trip runs ``len(step_ids)`` steps.  Donation keeps peak memory at one
+  (N, s) buffer instead of two.
+
+Step identity is carried by ``step_ids`` (global step numbers, folded into
+the PRNG key) and ``t_fracs`` (t/T learning-rate schedule positions), both
+precomputed per chunk, so a scanned trajectory is step-for-step the same
+stream of (key, lr) pairs the per-step Python loop produces.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import objective
+from repro.core.sampler import sample_alias
+from repro.kernels import ops
+
+# static hyper-parameters of the step body (everything that changes the
+# traced program rather than just its inputs)
+STATIC_ARGNAMES = (
+    "n_negatives",
+    "n_nodes",
+    "prob_fn",
+    "a",
+    "gamma",
+    "clip",
+    "batch",
+)
+
+
+def sgd_edge_step(
+    y,
+    key,
+    t_frac,
+    *,
+    edge_src,
+    edge_dst,
+    edge_thr,
+    edge_alias,
+    neg_thr,
+    neg_alias,
+    n_negatives: int,
+    n_nodes: int,
+    prob_fn: str = "inv_quadratic",
+    a: float = 1.0,
+    gamma: float = 7.0,
+    clip: float = 5.0,
+    rho0: float = 1.0,
+    batch: int = 4096,
+):
+    """One SGD step over a freshly sampled edge batch.  t_frac = t/T.
+
+    Unjitted on purpose: ``core.layout.layout_step`` wraps it for per-step
+    dispatch, :func:`scan_layout_steps` scans it, and the shard_map local-SGD
+    bodies inline it — one definition, three drivers.
+    """
+    ke, kn, _ = jax.random.split(key, 3)
+    e = sample_alias(ke, edge_thr, edge_alias, (batch,))
+    i, j = edge_src[e], edge_dst[e]
+    negs = sample_alias(kn, neg_thr, neg_alias, (batch, n_negatives))
+    # mask collisions: negative == source or target of the positive edge
+    neg_mask = ((negs != i[:, None]) & (negs != j[:, None])).astype(jnp.float32)
+
+    yi, yj, yneg = y[i], y[j], y[negs]
+    if prob_fn == "inv_quadratic":
+        gi, gj, gneg = ops.largevis_grads(
+            yi, yj, yneg, neg_mask, gamma=gamma, a=a, clip=clip
+        )
+    else:
+        gi, gj, gneg = objective.grads_autodiff(
+            yi, yj, yneg, neg_mask, prob_fn=prob_fn, a=a, gamma=gamma, clip=clip
+        )
+    lr = rho0 * jnp.maximum(1.0 - t_frac, 1e-4)
+    # single fused scatter-add (3 separate .at[].add calls triple the
+    # y read/write traffic — §Perf hillclimb 3 iter 2)
+    s = y.shape[1]
+    idx = jnp.concatenate([i, j, negs.reshape(-1)])
+    upd = jnp.concatenate([gi, gj, gneg.reshape(-1, s)], axis=0)
+    return y.at[idx].add(-lr * upd)
+
+
+def scan_layout_steps(y, base_key, step_ids, t_fracs, **kw):
+    """Run ``len(step_ids)`` SGD steps as one ``lax.scan``.
+
+    step k uses key ``fold_in(base_key, step_ids[k])`` and lr position
+    ``t_fracs[k]`` — the same (key, lr) stream as a Python loop over
+    ``sgd_edge_step``, so trajectories match the per-step driver.
+    """
+
+    def one(y, x):
+        sid, tf = x
+        return sgd_edge_step(y, jax.random.fold_in(base_key, sid), tf, **kw), None
+
+    y, _ = jax.lax.scan(one, y, (step_ids, t_fracs))
+    return y
+
+
+@functools.partial(
+    jax.jit,
+    donate_argnums=(0,),
+    static_argnames=STATIC_ARGNAMES,
+)
+def layout_chunk(
+    y,
+    base_key,
+    step_ids,
+    t_fracs,
+    *,
+    edge_src,
+    edge_dst,
+    edge_thr,
+    edge_alias,
+    neg_thr,
+    neg_alias,
+    n_negatives: int,
+    n_nodes: int,
+    prob_fn: str = "inv_quadratic",
+    a: float = 1.0,
+    gamma: float = 7.0,
+    clip: float = 5.0,
+    rho0: float = 1.0,
+    batch: int = 4096,
+):
+    """Jitted dispatch unit: ``len(step_ids)`` scanned steps, donated ``y``.
+
+    The chunk length is static (it is a shape), so a driver using a fixed
+    ``steps_per_dispatch`` plus one remainder chunk compiles at most twice.
+    """
+    return scan_layout_steps(
+        y,
+        base_key,
+        step_ids,
+        t_fracs,
+        edge_src=edge_src,
+        edge_dst=edge_dst,
+        edge_thr=edge_thr,
+        edge_alias=edge_alias,
+        neg_thr=neg_thr,
+        neg_alias=neg_alias,
+        n_negatives=n_negatives,
+        n_nodes=n_nodes,
+        prob_fn=prob_fn,
+        a=a,
+        gamma=gamma,
+        clip=clip,
+        rho0=rho0,
+        batch=batch,
+    )

@@ -40,12 +40,23 @@ def _kernel(yi_ref, yj_ref, yn_ref, mask_ref, gi_ref, gj_ref, gn_ref, *,
     gn_ref[...] = jnp.clip(-gneg_i, -clip, clip).reshape(t, m * s)
 
 
+def _resolve_interpret(interpret) -> bool:
+    """Backend-aware default (mirrors ops.py): ``None`` -> interpret mode
+    everywhere except TPU, where the kernel compiles.  The old hard
+    ``interpret=True`` default silently ran the Python interpreter path on
+    TPU unless every caller remembered to override it."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("gamma", "a", "clip", "eps",
                                              "tile", "interpret"))
 def largevis_grads(yi, yj, yneg, neg_mask, *, gamma: float = 7.0,
                    a: float = 1.0, clip: float = 5.0, eps: float = 0.1,
-                   tile: int = 2048, interpret: bool = True):
+                   tile: int = 2048, interpret: bool | None = None):
     """yi/yj: (B,s); yneg: (B,M,s); neg_mask: (B,M) -> (gi, gj, gneg)."""
+    interpret = _resolve_interpret(interpret)
     B, s = yi.shape
     M = yneg.shape[1]
     tile = min(tile, B)
@@ -75,3 +86,35 @@ def largevis_grads(yi, yj, yneg, neg_mask, *, gamma: float = 7.0,
         interpret=interpret,
     )(yi, yj, yneg.reshape(B, M * s), neg_mask)
     return gi, gj, gn.reshape(B, M, s)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "a", "clip", "eps",
+                                             "tile", "interpret"))
+def largevis_grads_chunked(yi, yj, yneg, neg_mask, *, gamma: float = 7.0,
+                           a: float = 1.0, clip: float = 5.0,
+                           eps: float = 0.1, tile: int = 2048,
+                           interpret: bool | None = None):
+    """Tile-padded entry point: any batch size B, same contract as
+    :func:`largevis_grads`.
+
+    The strict kernel requires ``B % tile == 0`` — a non-starter inside the
+    scanned layout engine, where the collision cap (≤ N/2) produces
+    arbitrary odd batch sizes.  This wrapper pads B up to a tile multiple
+    (zero rows, zero neg_mask) and slices the grads back; padded rows never
+    reach the scatter-add.
+    """
+    B = yi.shape[0]
+    M = yneg.shape[1]
+    t = min(tile, B)
+    pad = (-B) % t
+    if pad == 0:
+        return largevis_grads(yi, yj, yneg, neg_mask, gamma=gamma, a=a,
+                              clip=clip, eps=eps, tile=t,
+                              interpret=interpret)
+    def zf(x):
+        return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+
+    gi, gj, gn = largevis_grads(
+        zf(yi), zf(yj), zf(yneg), zf(neg_mask), gamma=gamma, a=a, clip=clip,
+        eps=eps, tile=t, interpret=interpret)
+    return gi[:B], gj[:B], gn[:B, :M]

@@ -8,15 +8,15 @@ kernel tests assert this).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.knn_topk import pairwise_sqdist as _sqdist_pallas
-from repro.kernels.largevis_grad import largevis_grads as _lvgrad_pallas
+from repro.kernels.largevis_grad import (
+    largevis_grads_chunked as _lvgrad_pallas,
+)
 
 
 def _on_tpu() -> bool:
@@ -37,6 +37,8 @@ def pairwise_sqdist(a, b, *, impl: str = "auto", **kw):
 
 def largevis_grads(yi, yj, yneg, neg_mask, *, gamma=7.0, a=1.0, clip=5.0,
                    eps=0.1, impl: str = "auto", **kw):
+    # chunked entry: pads odd (collision-capped) batches to a tile multiple,
+    # so the kernel is usable inside the scanned layout engine
     if _resolve(impl) == "pallas":
         return _lvgrad_pallas(yi, yj, yneg, neg_mask, gamma=gamma, a=a,
                               clip=clip, eps=eps,

@@ -23,8 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import input_specs
-from repro.models import costbook, make_model, param_specs
+from repro.models import make_model, param_specs
 from repro.runtime import sharding as sh
 
 

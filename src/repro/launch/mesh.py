@@ -4,18 +4,20 @@ from __future__ import annotations
 
 import jax
 
+from repro.runtime.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_data_mesh(data: int = 0):
     """1-D "data" mesh for the sharded KNN pipeline (0 = all devices)."""
     n = len(jax.devices())
     data = n if data <= 0 else min(data, n)
-    return jax.make_mesh((data,), ("data",))
+    return make_mesh((data,), ("data",))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -23,4 +25,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // data))
-    return jax.make_mesh((data, model), ("data", "model"))
+    return make_mesh((data, model), ("data", "model"))

@@ -6,8 +6,6 @@ the dry-run compiles exactly what the production launcher runs.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -187,8 +185,11 @@ def make_largevis_step_local(mesh, *, n_nodes: int, n_edges: int,
     sampling, proportional allocation), applies ``sync_every`` local update
     steps, and replicas merge with one delta-psum — the local-SGD analogue
     of the paper's async SGD (DESIGN.md §2).
+
+    The H local steps are one scanned loop (``layout_engine``), the same
+    body the single-device engine dispatches.
     """
-    from repro.core.layout import layout_step
+    from repro.core.layout_engine import scan_layout_steps
 
     dp = sh.dp_axes(mesh)
     n_shards = 1
@@ -205,17 +206,14 @@ def make_largevis_step_local(mesh, *, n_nodes: int, n_edges: int,
             if len(dp) > 1:
                 dev = dev + mesh.shape[dp[-1]] * jax.lax.axis_index(dp[0])
             y0 = y
-
-            def one(i, y):
-                key = jax.random.fold_in(
-                    jax.random.fold_in(jax.random.key(seed[0]), dev), i)
-                return layout_step(
-                    y, key, t_frac, edge_src=esrc, edge_dst=edst,
-                    edge_thr=ethr, edge_alias=eali, neg_thr=nthr,
-                    neg_alias=nali, n_negatives=n_negatives,
-                    n_nodes=n_nodes, batch=b_loc)
-
-            y = jax.lax.fori_loop(0, sync_every, one, y)
+            base_key = jax.random.fold_in(jax.random.key(seed[0]), dev)
+            step_ids = jnp.arange(sync_every, dtype=jnp.int32)
+            y = scan_layout_steps(
+                y, base_key, step_ids,
+                jnp.broadcast_to(t_frac, (sync_every,)).astype(jnp.float32),
+                edge_src=esrc, edge_dst=edst, edge_thr=ethr, edge_alias=eali,
+                neg_thr=nthr, neg_alias=nali, n_negatives=n_negatives,
+                n_nodes=n_nodes, batch=b_loc)
             # merge replicas: average the deltas (one psum per H steps)
             return y0 + jax.lax.pmean(y - y0, dp)
 

@@ -15,13 +15,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.data.synthetic import token_stream
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.steps import make_train_step
 from repro.models import make_model
-from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.optim.adamw import adamw_init
 from repro.runtime.fault_tolerance import PreemptionGuard, Watchdog
 
 

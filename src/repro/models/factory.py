@@ -12,8 +12,6 @@ benchmarks are arch-agnostic:
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 
 from repro.models import encdec, lm

@@ -12,8 +12,6 @@ cache), ``lm_decode`` (one token vs cache).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -59,7 +59,10 @@ def _moe_apply_sharded(params, x, cfg, capacity_factor, pol):
     mesh, dp, train = pol
     from jax.sharding import PartitionSpec as P
     fsdp = "data" if train else None
-    g = lambda shape, spec: shd._guard(mesh, shape, spec)
+
+    def g(shape, spec):
+        return shd._guard(mesh, shape, spec)
+
     r_spec = g(params["router"].shape, [fsdp, None])
     wg_spec = g(params["w_gate"].shape,
                 [None if train else "data", fsdp, "model"])

@@ -7,7 +7,6 @@ to its optimizer moments — the property the dry-run relies on.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -25,9 +24,8 @@ class AdamWConfig:
 
 
 def adamw_init(params):
-    zeros = lambda p: jnp.zeros_like(p)
-    return {"m": jax.tree.map(zeros, params),
-            "v": jax.tree.map(zeros, params),
+    return {"m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
             "step": jnp.zeros((), jnp.int32)}
 
 

@@ -9,8 +9,6 @@ optimizer; tests assert the quantization error bound and EF drift cancel.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

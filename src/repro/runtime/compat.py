@@ -5,11 +5,16 @@
 keyword).  Every multi-device code path in this repo (KNN pipeline,
 local-SGD layout, sharded layout step) goes through :func:`shard_map`
 below so the rest of the code is written once against the new calling
-convention and runs on either JAX.
+convention and runs on either JAX.  :func:`make_mesh` covers the same
+split for ``jax.make_mesh`` (added in 0.4.35; the CI jax floor is
+0.4.30).
 """
 from __future__ import annotations
 
+import math
+
 import jax
+import numpy as np
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
@@ -24,3 +29,13 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     from jax.experimental.shard_map import shard_map as _shard_map
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       check_rep=check_vma)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` if available (>= 0.4.35), else a hand-built
+    ``jax.sharding.Mesh`` over the first ``prod(axis_shapes)`` devices."""
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(axis_shapes, axis_names)
+    n = math.prod(axis_shapes)
+    devs = np.asarray(jax.devices()[:n]).reshape(axis_shapes)
+    return jax.sharding.Mesh(devs, axis_names)

@@ -1,12 +1,9 @@
 """Checkpoint system: atomicity, rotation, restore fidelity, elastic load."""
-import json
 import pathlib
-import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import checkpointer as ck
 from repro.checkpoint.manager import CheckpointManager
@@ -63,7 +60,8 @@ def test_elastic_restore_new_sharding(tmp_path):
     """Checkpoint saved unsharded restores onto a different mesh layout."""
     t = _tree()
     ck.save(tmp_path, 1, t)
-    mesh = jax.make_mesh((1,), ("data",))
+    from repro.runtime.compat import make_mesh
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh = {"w": NamedSharding(mesh, P("data", None)),
           "nested": {"b": NamedSharding(mesh, P()),

@@ -8,7 +8,6 @@ import time
 
 import jax
 import numpy as np
-import pytest
 
 from repro.runtime.fault_tolerance import Watchdog
 
