@@ -36,18 +36,20 @@ def main() -> int:
     ap.add_argument(
         "--rows",
         default="",
-        help="only gate rows whose name contains this substring (e.g. "
-        "'layout_scan' to skip the dispatch-bound loop rows, whose "
-        "wall-clock is the most machine-sensitive)",
+        help="only gate rows whose name contains one of these comma-"
+        "separated substrings (e.g. 'layout_scan,layout_fused' to gate "
+        "both engine paths while skipping the dispatch-bound loop rows, "
+        "whose wall-clock is the most machine-sensitive)",
     )
     args = ap.parse_args()
 
     fresh = load_rows(args.fresh)
     baseline = load_rows(args.baseline)
+    row_filters = [s for s in args.rows.split(",") if s]
 
     compared, failures = 0, []
     for name, base_row in sorted(baseline.items()):
-        if args.rows and args.rows not in name:
+        if row_filters and not any(s in name for s in row_filters):
             continue
         if args.metric not in base_row or name not in fresh:
             continue

@@ -41,6 +41,10 @@ class LargeVisConfig:
     steps_per_dispatch: int = 100   # scan-fused steps per device dispatch
     #   (core/layout_engine.py); <=1 falls back to the per-step Python loop
     #   (debug / visual-progress mode — ~dispatch-bound at small N)
+    fused_step: bool = True         # fully-fused edge-step kernel
+    #   (kernels/largevis_step.py: gather+grad+scatter in one pass, y
+    #   updated in place); False = split gather/grad/scatter path (debug;
+    #   autodiff prob_fns and VMEM-oversized embeddings split automatically)
     sync_every: int = 1             # H: local-SGD sync period (1 = sync SGD)
     init_scale: float = 1e-4        # initial layout ~ N(0, init_scale)
     neg_power: float = 0.75         # P_n(j) ∝ d_j^0.75

@@ -75,7 +75,7 @@ def _step_kwargs(edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
         neg_thr=neg_sampler.threshold, neg_alias=neg_sampler.alias,
         n_negatives=cfg.n_negatives, n_nodes=n_nodes, prob_fn=cfg.prob_fn,
         a=cfg.prob_a, gamma=cfg.gamma, clip=cfg.grad_clip, rho0=cfg.rho0,
-        batch=batch)
+        batch=batch, fused_step=bool(getattr(cfg, "fused_step", True)))
 
 
 # ---------------------------------------------------------------------------
@@ -118,7 +118,8 @@ def make_local_sgd_fns(mesh, cfg, n_nodes: int, *, batch: int):
                 edge_alias=edge_alias, neg_thr=neg_thr, neg_alias=neg_alias,
                 n_negatives=cfg.n_negatives, n_nodes=n_nodes,
                 prob_fn=cfg.prob_fn, a=cfg.prob_a, gamma=cfg.gamma,
-                clip=cfg.grad_clip, rho0=cfg.rho0, batch=batch)
+                clip=cfg.grad_clip, rho0=cfg.rho0, batch=batch,
+                fused_step=bool(getattr(cfg, "fused_step", True)))
             return y[None]
 
         return shard_map(

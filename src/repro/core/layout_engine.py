@@ -43,6 +43,7 @@ STATIC_ARGNAMES = (
     "gamma",
     "clip",
     "batch",
+    "fused_step",
 )
 
 
@@ -65,12 +66,22 @@ def sgd_edge_step(
     clip: float = 5.0,
     rho0: float = 1.0,
     batch: int = 4096,
+    fused_step: bool = True,
 ):
     """One SGD step over a freshly sampled edge batch.  t_frac = t/T.
 
     Unjitted on purpose: ``core.layout.layout_step`` wraps it for per-step
     dispatch, :func:`scan_layout_steps` scans it, and the shard_map local-SGD
     bodies inline it — one definition, three drivers.
+
+    ``fused_step`` routes the update through the fully-fused edge-step
+    kernel (``kernels/largevis_step.py``: in-kernel gather + grad +
+    scatter-accumulate, y aliased in place, no (B, M, s) intermediates or
+    (B*(2+M), s) concat buffer).  The split gather/grad/scatter path below
+    remains for autodiff ``prob_fn``s, embeddings past the kernel's TPU
+    VMEM bound (``ops.fused_step_supported``), and ``fused_step=False``
+    debugging; both paths apply updates in the same canonical per-edge
+    interleaved order, so their trajectories match bitwise.
     """
     ke, kn, _ = jax.random.split(key, 3)
     e = sample_alias(ke, edge_thr, edge_alias, (batch,))
@@ -78,6 +89,16 @@ def sgd_edge_step(
     negs = sample_alias(kn, neg_thr, neg_alias, (batch, n_negatives))
     # mask collisions: negative == source or target of the positive edge
     neg_mask = ((negs != i[:, None]) & (negs != j[:, None])).astype(jnp.float32)
+    lr = rho0 * jnp.maximum(1.0 - t_frac, 1e-4)
+
+    if (
+        fused_step
+        and prob_fn == "inv_quadratic"
+        and ops.fused_step_supported(n_nodes, y.shape[1])
+    ):
+        return ops.largevis_edge_step(
+            y, i, j, negs, neg_mask, lr, gamma=gamma, a=a, clip=clip
+        )
 
     yi, yj, yneg = y[i], y[j], y[negs]
     if prob_fn == "inv_quadratic":
@@ -88,12 +109,13 @@ def sgd_edge_step(
         gi, gj, gneg = objective.grads_autodiff(
             yi, yj, yneg, neg_mask, prob_fn=prob_fn, a=a, gamma=gamma, clip=clip
         )
-    lr = rho0 * jnp.maximum(1.0 - t_frac, 1e-4)
     # single fused scatter-add (3 separate .at[].add calls triple the
-    # y read/write traffic — §Perf hillclimb 3 iter 2)
+    # y read/write traffic — §Perf hillclimb 3 iter 2), per-edge
+    # interleaved [i_e, j_e, negs_e] so the duplicate-accumulation order
+    # matches the fused kernel's sequential loop bitwise
     s = y.shape[1]
-    idx = jnp.concatenate([i, j, negs.reshape(-1)])
-    upd = jnp.concatenate([gi, gj, gneg.reshape(-1, s)], axis=0)
+    idx = jnp.concatenate([i[:, None], j[:, None], negs], axis=1).reshape(-1)
+    upd = jnp.concatenate([gi[:, None], gj[:, None], gneg], axis=1).reshape(-1, s)
     return y.at[idx].add(-lr * upd)
 
 
@@ -138,6 +160,7 @@ def layout_chunk(
     clip: float = 5.0,
     rho0: float = 1.0,
     batch: int = 4096,
+    fused_step: bool = True,
 ):
     """Jitted dispatch unit: ``len(step_ids)`` scanned steps, donated ``y``.
 
@@ -163,4 +186,5 @@ def layout_chunk(
         clip=clip,
         rho0=rho0,
         batch=batch,
+        fused_step=fused_step,
     )

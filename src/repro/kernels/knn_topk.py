@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.largevis_grad import _resolve_interpret
+
 
 def _kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
     k_idx = pl.program_id(2)
@@ -48,12 +50,16 @@ def _pad_to(x, m, axis):
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def pairwise_sqdist(a: jax.Array, b: jax.Array, *, bm: int = 256,
                     bn: int = 256, bk: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """a: (M,d), b: (N,d) -> (M,N) squared distances (f32).
 
-    interpret=True executes the kernel body on CPU (this container);
-    on TPU pass interpret=False.
+    ``interpret=None`` resolves per backend (the shared largevis_grad
+    helper, PR-2 fix): compiled on TPU, interpret mode (kernel body as
+    XLA ops) elsewhere, e.g. this CPU container.  The old hard
+    ``interpret=True`` default silently ran the interpreter path on TPU
+    for every direct caller that forgot to override it.
     """
+    interpret = _resolve_interpret(interpret)
     M, d = a.shape
     N = b.shape[0]
     bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, d)

@@ -17,6 +17,11 @@ from repro.kernels.knn_topk import pairwise_sqdist as _sqdist_pallas
 from repro.kernels.largevis_grad import (
     largevis_grads_chunked as _lvgrad_pallas,
 )
+from repro.kernels.largevis_step import fused_edge_step as _lvstep_pallas
+
+# the fused edge-step kernel keeps the whole (N, s) embedding VMEM-resident
+# for the duration of the call; above this budget the split path takes over
+_FUSED_MAX_Y_BYTES = 8 * 1024 * 1024
 
 
 def _on_tpu() -> bool:
@@ -27,6 +32,25 @@ def _resolve(impl: str) -> str:
     if impl == "auto":
         return "pallas" if _on_tpu() else "ref"
     return impl
+
+
+def fused_step_supported(n_nodes: int, out_dim: int) -> bool:
+    """Whether ``largevis_edge_step`` may route to the fused kernel.
+
+    On TPU the kernel needs the full (N, s) f32 embedding resident in VMEM
+    (~16 MB/core; half is budgeted for y, the rest for edge blocks and
+    scratch), so it is bounded at ~1M nodes for s=2.  CPU interpret mode
+    lowers to plain XLA ops and has no size bound.  Any other backend
+    (GPU) gets the split path: there the interpret lowering's sequential
+    per-row update loop would serialize B*(2+M) tiny updates per step,
+    far slower than one parallel scatter-add.
+    """
+    backend = jax.default_backend()
+    if backend == "cpu":
+        return True
+    if backend != "tpu":
+        return False
+    return n_nodes * out_dim * 4 <= _FUSED_MAX_Y_BYTES
 
 
 def pairwise_sqdist(a, b, *, impl: str = "auto", **kw):
@@ -45,6 +69,36 @@ def largevis_grads(yi, yj, yneg, neg_mask, *, gamma=7.0, a=1.0, clip=5.0,
                               interpret=not _on_tpu(), **kw)
     return ref.largevis_grads_ref(yi, yj, yneg, gamma=gamma, a=a, clip=clip,
                                   eps=eps, neg_mask=neg_mask)
+
+
+def largevis_edge_step(y, i, j, negs, neg_mask, lr, *, gamma=7.0, a=1.0,
+                       clip=5.0, eps=0.1, impl: str = "auto", **kw):
+    """One fused in-place SGD edge-step update of the (N, s) embedding.
+
+    impl:
+      "fused" | "pallas" — the fully-fused Pallas kernel
+        (``largevis_step.fused_edge_step``: in-kernel gather + grad +
+        sequential scatter-accumulate, y aliased in place).
+      "ref"  — the pure-jnp oracle (``ref.fused_edge_step_ref``).
+      "auto" — the kernel on EVERY backend.  Unlike the wrappers above,
+        interpret mode is not the slow path here: the kernel body lowers
+        to XLA ops and its sequential phase-1 update loop beats XLA's
+        general scatter-add (~1.5x at N=20k on CPU), so the kernel is the
+        fastest formulation on CPU as well as TPU.
+
+    Callers must check :func:`fused_step_supported` first (backend gate +
+    TPU VMEM bound); ``core.layout_engine.sgd_edge_step`` falls back to
+    the split gather/grad/scatter path when it fails, and for autodiff
+    ``prob_fn``s.
+    """
+    if impl in ("auto", "fused", "pallas"):
+        return _lvstep_pallas(y, i, j, negs, neg_mask, lr, gamma=gamma,
+                              a=a, clip=clip, eps=eps, **kw)
+    if impl == "ref":
+        return ref.fused_edge_step_ref(y, i, j, negs, neg_mask, lr,
+                                       gamma=gamma, a=a, clip=clip, eps=eps)
+    raise ValueError(f"unknown impl {impl!r}; "
+                     "expected fused|pallas|ref|auto")
 
 
 def flash_attention(q, k, v, *, causal=True, impl: str = "auto", **kw):

@@ -57,6 +57,40 @@ def largevis_grads_ref(yi, yj, yneg, *, gamma: float = 7.0, a: float = 1.0,
 
 
 # ---------------------------------------------------------------------------
+# largevis_step: fully-fused gather -> grad -> scatter-update edge step
+# ---------------------------------------------------------------------------
+
+def fused_edge_step_ref(y, i, j, negs, neg_mask, lr, *, gamma: float = 7.0,
+                        a: float = 1.0, clip: float = 5.0,
+                        eps: float = 0.1):
+    """Pure-jnp oracle for ``largevis_step.fused_edge_step``.
+
+    One SGD update of the (N, s) embedding over a sampled edge batch:
+    gather the rows, compute the Eqn (6) forces (``largevis_grads_ref``),
+    and scatter-accumulate ``-lr*g`` back into ``y``.
+
+    Duplicate-index contract: intra-batch duplicates (the same row drawn as
+    i, j and/or a negative, possibly by several edges) ACCUMULATE — every
+    update lands.  The update stream is per-edge interleaved,
+    ``[i_e, j_e, negs_e,0..M-1] for e = 0..B-1``, and XLA's scatter-add
+    applies duplicate updates in stream order, which is exactly the order
+    the fused kernel's sequential phase-1 loop uses — the kernel is
+    bit-reproducible against this oracle (asserted by tests).
+    """
+    f32 = jnp.float32
+    y = y.astype(f32)
+    gi, gj, gneg = largevis_grads_ref(y[i], y[j], y[negs], gamma=gamma,
+                                      a=a, clip=clip, eps=eps,
+                                      neg_mask=neg_mask)
+    s = y.shape[1]
+    idx = jnp.concatenate([i[:, None], j[:, None], negs], axis=1).reshape(-1)
+    upd = jnp.concatenate([gi[:, None], gj[:, None], gneg],
+                          axis=1).reshape(-1, s)
+    lr = jnp.asarray(lr, f32)
+    return y.at[idx].add(-lr * upd)
+
+
+# ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------
 

@@ -174,7 +174,8 @@ def make_step(cfg, mesh, shape_cfg):
 
 def make_largevis_step_local(mesh, *, n_nodes: int, n_edges: int,
                              batch: int, out_dim: int = 2,
-                             n_negatives: int = 5, sync_every: int = 8):
+                             n_negatives: int = 5, sync_every: int = 8,
+                             fused_step: bool = True):
     """§Perf hillclimb 3: per-shard edge sampling + local-SGD sync.
 
     The v1 step shards the edge alias tables over DP and lets every device
@@ -213,7 +214,7 @@ def make_largevis_step_local(mesh, *, n_nodes: int, n_edges: int,
                 jnp.broadcast_to(t_frac, (sync_every,)).astype(jnp.float32),
                 edge_src=esrc, edge_dst=edst, edge_thr=ethr, edge_alias=eali,
                 neg_thr=nthr, neg_alias=nali, n_negatives=n_negatives,
-                n_nodes=n_nodes, batch=b_loc)
+                n_nodes=n_nodes, batch=b_loc, fused_step=fused_step)
             # merge replicas: average the deltas (one psum per H steps)
             return y0 + jax.lax.pmean(y - y0, dp)
 

@@ -70,6 +70,59 @@ def test_explore_never_worsens(blobs, true_knn):
         r_prev = r
 
 
+def test_brute_force_map_odd_tiles(blobs):
+    """The lax.map oracle handles N % tile != 0 (padded row tiles) and
+    never materializes an (N, N) distance matrix when tiled."""
+    x, _ = blobs
+    x = x[:403]
+    idx, dist = knn_lib.brute_force_knn(x, 7, tile=128)
+    assert idx.shape == (403, 7) and dist.shape == (403, 7)
+    idx_n = np.asarray(idx)
+    assert (idx_n != np.arange(403)[:, None]).all(), "self edges"
+    assert ((idx_n >= 0) & (idx_n < 403)).all(), "padded rows leaked"
+    xn = np.asarray(x, np.float64)
+    d = ((xn[:, None] - xn[None]) ** 2).sum(-1)
+    np.fill_diagonal(d, np.inf)
+    want_d = np.sort(np.sort(d, axis=1)[:, :7], axis=1)
+    np.testing.assert_allclose(np.sort(np.asarray(dist), axis=1), want_d,
+                               rtol=1e-4, atol=1e-3)
+    # one dispatch, tiled: the loop is inside the program, and no tile is
+    # ever the full (N, N) matrix
+    hlo = knn_lib.brute_force_knn.lower(x, 7, tile=128).as_text()
+    assert "403x403" not in hlo, "full NxN distance matrix materialized"
+
+
+def test_forest_knn_streaming_merge_peak_buffer(blobs):
+    """Trees stream through a running top-k: the lowered program holds no
+    (N, n_trees*(k+1)) all-trees candidate concat — peak candidate memory
+    is (N, 2k+1) — and the output matches the batch-merge reference."""
+    x, _ = blobs
+    N, k, n_trees, window = x.shape[0], 15, 4, 32
+    depth = knn_lib._auto_depth(N, 64)
+    idx, dist = knn_lib.forest_knn(x, KEY, n_trees=n_trees, depth=depth,
+                                   k=k, window=window)
+    # reference: the old all-trees concat + single merge
+    codes = knn_lib.hash_codes(x, KEY, n_trees, depth)
+    ids, ds = zip(*(knn_lib._window_candidates_one_tree(
+        x, codes[:, t], k, window) for t in range(n_trees)))
+    ref_idx, ref_dist = knn_lib.merge_candidates(
+        jnp.concatenate(ids, axis=1), jnp.concatenate(ds, axis=1), k,
+        self_idx=jnp.arange(N))
+    # same neighbor sets (row order may differ on exact-tie distances)
+    order_a = np.lexsort((np.asarray(idx),
+                          np.round(np.asarray(dist), 5)), axis=-1)
+    order_b = np.lexsort((np.asarray(ref_idx),
+                          np.round(np.asarray(ref_dist), 5)), axis=-1)
+    np.testing.assert_array_equal(
+        np.take_along_axis(np.asarray(idx), order_a, 1),
+        np.take_along_axis(np.asarray(ref_idx), order_b, 1))
+    hlo = knn_lib.forest_knn.lower(x, KEY, n_trees=n_trees, depth=depth,
+                                   k=k, window=window).as_text()
+    assert f"{N}x{n_trees * (k + 1)}x" not in hlo, (
+        "all-trees candidate concat materialized")
+    assert f"{N}x{2 * k + 1}x" in hlo, "expected the streaming merge width"
+
+
 def test_merge_candidates_dedup_and_self():
     ids = jnp.array([[1, 1, 2, 0], [3, 2, 2, 1]], jnp.int32)
     d = jnp.array([[1., 1., 2., 3.], [5., 1., 1., 2.]], jnp.float32)
