@@ -18,6 +18,7 @@ TABLES = [
     ("fig4_prob_functions", "benchmarks.fig4_prob_functions"),
     ("fig5_knn_classifier", "benchmarks.fig5_knn_classifier"),
     ("table2_layout_time", "benchmarks.table2_layout_time"),
+    ("table3_sampler_build", "benchmarks.table3_sampler_build"),
     ("fig6_scaling", "benchmarks.fig6_scaling"),
     ("fig7_sensitivity", "benchmarks.fig7_sensitivity"),
 ]

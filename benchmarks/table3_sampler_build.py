@@ -1,0 +1,85 @@
+"""Sampler-table construction benchmark: device vs host alias building.
+
+The stage-1 -> stage-2 boundary builds alias tables over all E = N*K
+directed edges.  The host path is Vose's method as a Python loop — O(E)
+but single-core and interpreter-bound, minutes at the paper's E = 150M —
+while the device path (``core/sampler.py::build_alias_device``) is one
+jitted partition/prefix-sum/searchsorted computation (no sort — O(E)
+data movement plus O(E log E) binary searches) with zero host round
+trips.  These rows record that boundary's cost the
+same way the ``layout_*`` rows record stepping cost.
+
+Rows: ``sampler_build_n{2000,20000,100000}`` at K=50 (E = 100k..5M).
+``us`` is the *device* build (best-of-5, untimed warmup excludes
+compile); ``us_per_edge`` is the metric the CI regression gate consumes
+(``check_regression --rows sampler_build``, 2x); ``host_us`` /
+``speedup_vs_host`` record the Vose oracle on the identical weights.
+
+``--tiny`` runs only N=2000 with the exact full-run config (same row
+name, so the committed baseline stays valid for both modes — the CI
+bench-smoke mode).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows, timed
+from repro.core import sampler as sampler_lib
+
+NS = (2_000, 20_000, 100_000)
+K = 50          # edges per node: E = N*K spans 100k .. 5M
+
+
+def _graph(n: int, k: int = K, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, n, (n, k)).astype(np.int32)
+    w = rng.uniform(0.1, 2.0, (n, k)).astype(np.float32)
+    return idx, w
+
+
+def sampler_rows(rows: Rows, ns=NS):
+    for n in ns:
+        idx, w = _graph(n)
+        e_total = idx.size
+
+        def build_device():
+            es = sampler_lib.build_edge_sampler(idx, w, impl="device")
+            jax.block_until_ready(es.threshold)
+            return es
+
+        # device: best-of-5 after an untimed warmup (compile excluded)
+        _, dev_s = timed(build_device, repeats=5)
+        # host Vose: single timed pass, no warmup (nothing compiles, and
+        # the Python loop at E=5M is too slow to repeat)
+        _, host_s = timed(sampler_lib.build_edge_sampler, idx, w,
+                          impl="host", repeats=1, warmup=0)
+        rows.add(f"sampler_build_n{n}", dev_s,
+                 edges=e_total,
+                 us_per_edge=round(dev_s * 1e6 / e_total, 6),
+                 host_us=round(host_s * 1e6, 1),
+                 host_us_per_edge=round(host_s * 1e6 / e_total, 6),
+                 speedup_vs_host=round(host_s / max(dev_s, 1e-9), 2))
+
+
+def run(rows: Rows):
+    sampler_rows(rows)
+
+
+def run_tiny(rows: Rows):
+    """CI bench-smoke mode: N=2000 only, identical config to the full
+    run's n2000 row (the committed baseline covers both modes)."""
+    sampler_rows(rows, ns=(2_000,))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="N=2000 row only (CI smoke mode)")
+    args = ap.parse_args()
+    rows = Rows("table3_sampler_build")
+    (run_tiny if args.tiny else run)(rows)
+    rows.print_csv()
+    rows.save()

@@ -46,6 +46,11 @@ class LargeVisConfig:
     #   updated in place); False = split gather/grad/scatter path (debug;
     #   autodiff prob_fns and VMEM-oversized embeddings split automatically)
     sync_every: int = 1             # H: local-SGD sync period (1 = sync SGD)
+    sampler_impl: str = "auto"      # alias-table builder at the stage
+    #   boundary: "device" = jitted sort/prefix-sum construction, tables
+    #   built on device straight from the (possibly sharded) graph;
+    #   "host" = numpy Vose loop (the test oracle / debug path);
+    #   "auto" -> "device" (core/sampler.py)
     init_scale: float = 1e-4        # initial layout ~ N(0, init_scale)
     neg_power: float = 0.75         # P_n(j) ∝ d_j^0.75
     dtype: Any = jnp.float32

@@ -12,18 +12,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.sampler import EdgeSampler, NodeSampler, sample_alias
+from repro.core.sampler import EdgeSampler, NodeSampler
 
 
 @functools.partial(jax.jit, donate_argnums=(0,),
                    static_argnames=("n_negatives", "batch"))
-def line_step(y, key, t_frac, *, edge_src, edge_dst, edge_thr, edge_alias,
-              neg_thr, neg_alias, n_negatives: int, batch: int,
+def line_step(y, key, t_frac, *, edge_sampler: EdgeSampler,
+              neg_sampler: NodeSampler, n_negatives: int, batch: int,
               rho0: float = 0.025, clip: float = 5.0):
     ke, kn = jax.random.split(key)
-    e = sample_alias(ke, edge_thr, edge_alias, (batch,))
-    i, j = edge_src[e], edge_dst[e]
-    negs = sample_alias(kn, neg_thr, neg_alias, (batch, n_negatives))
+    i, j = edge_sampler.sample(ke, batch)
+    negs = neg_sampler.sample(kn, (batch, n_negatives))
 
     def loss(y):
         yi, yj, yn = y[i], y[j], y[negs]
@@ -46,10 +45,6 @@ def line_layout(key, edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
     steps = max(1, total // batch)
     for t in range(steps):
         y = line_step(y, jax.random.fold_in(kr, t), jnp.float32(t / steps),
-                      edge_src=edge_sampler.src, edge_dst=edge_sampler.dst,
-                      edge_thr=edge_sampler.threshold,
-                      edge_alias=edge_sampler.alias,
-                      neg_thr=neg_sampler.threshold,
-                      neg_alias=neg_sampler.alias,
+                      edge_sampler=edge_sampler, neg_sampler=neg_sampler,
                       n_negatives=n_negatives, batch=batch, rho0=rho0)
     return y

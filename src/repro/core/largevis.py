@@ -18,6 +18,14 @@ Stage 2 steps through the scan-fused layout engine
 device dispatch with a donated coordinate buffer.  Passing a
 ``callback`` selects the per-step Python loop (one dispatch per step)
 so progress can be observed mid-layout.
+
+The stage-1 -> stage-2 hand-off is device-resident: with
+``cfg.sampler_impl`` ``"device"``/``"auto"`` the alias tables are built
+by a jitted sort/prefix-sum construction (`core/sampler.py`) directly
+from the device graph, and the samplers flow into every layout driver
+as JAX pytrees — no host materialization of ``idx``/``weights`` between
+the stages, which is what keeps the boundary O(E log E) on device
+instead of minutes of single-core Vose at the paper's E = 150M.
 """
 from __future__ import annotations
 
@@ -25,7 +33,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.largevis_default import DEFAULT, LargeVisConfig
 from repro.core import knn as knn_lib
@@ -57,11 +64,22 @@ def build_graph(x, key, cfg: LargeVisConfig = DEFAULT):
 
 def layout_graph(knn_idx, weights, key, cfg: LargeVisConfig = DEFAULT,
                  callback=None):
-    """Stage 2: probabilistic layout of a weighted KNN graph."""
+    """Stage 2: probabilistic layout of a weighted KNN graph.
+
+    ``cfg.sampler_impl`` selects the alias-table builder at the stage
+    boundary: ``"device"`` (what ``"auto"`` resolves to) builds the tables
+    in one jitted computation straight from the (possibly sharded) device
+    graph — stage-1 outputs never round-trip through the host; ``"host"``
+    is the numpy Vose oracle.  The ``sampler_s`` timing isolates table
+    construction from the layout itself (tables are blocked on, so async
+    dispatch cannot smear build time into ``layout_s``)."""
     t0 = time.time()
-    edge_s = sampler_lib.build_edge_sampler(knn_idx, weights)
+    edge_s = sampler_lib.build_edge_sampler(knn_idx, weights,
+                                            impl=cfg.sampler_impl)
     neg_s = sampler_lib.build_negative_sampler(knn_idx, weights,
-                                               power=cfg.neg_power)
+                                               power=cfg.neg_power,
+                                               impl=cfg.sampler_impl)
+    jax.block_until_ready((edge_s.threshold, neg_s.threshold))
     t1 = time.time()
     res = layout_lib.run_layout(key, edge_s, neg_s, knn_idx.shape[0], cfg,
                                 callback=callback)

@@ -68,11 +68,12 @@ def _collision_capped_batch(batch_size: int, n_nodes: int,
 
 def _step_kwargs(edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
                  n_nodes: int, cfg, batch: int) -> dict:
-    """The sgd_edge_step keyword bundle shared by every driver below."""
+    """The sgd_edge_step keyword bundle shared by every driver below.
+
+    Samplers ride through as pytrees — the jitted entry points see two
+    structured arguments, not six unpacked table arrays."""
     return dict(
-        edge_src=edge_sampler.src, edge_dst=edge_sampler.dst,
-        edge_thr=edge_sampler.threshold, edge_alias=edge_sampler.alias,
-        neg_thr=neg_sampler.threshold, neg_alias=neg_sampler.alias,
+        edge_sampler=edge_sampler, neg_sampler=neg_sampler,
         n_negatives=cfg.n_negatives, n_nodes=n_nodes, prob_fn=cfg.prob_fn,
         a=cfg.prob_a, gamma=cfg.gamma, clip=cfg.grad_clip, rho0=cfg.rho0,
         batch=batch, fused_step=bool(getattr(cfg, "fused_step", True)))
@@ -102,20 +103,21 @@ def make_local_sgd_fns(mesh, cfg, n_nodes: int, *, batch: int):
     rep = P()
     H = max(1, cfg.sync_every)
 
-    def local_steps(y_rep, seed, t_frac0, dt_frac, edge_src, edge_dst,
-                    edge_thr, edge_alias, neg_thr, neg_alias):
-        """H local steps on each replica (shard_map over 'data')."""
+    def local_steps(y_rep, seed, t_frac0, dt_frac, edge_sampler,
+                    neg_sampler):
+        """H local steps on each replica (shard_map over 'data').
 
-        def body(y_loc, seed, t_frac0, dt_frac, edge_src, edge_dst,
-                 edge_thr, edge_alias, neg_thr, neg_alias):
+        The sampler pytrees enter replicated — a single ``P()`` spec per
+        sampler covers every leaf (jax prefix-pytree semantics)."""
+
+        def body(y_loc, seed, t_frac0, dt_frac, edge_sampler, neg_sampler):
             dev = jax.lax.axis_index("data")
             base_key = jax.random.fold_in(jax.random.key(seed[0]), dev)
             step_ids = jnp.arange(H, dtype=jnp.int32)
             t_fracs = t_frac0 + dt_frac * step_ids.astype(jnp.float32)
             y = layout_engine.scan_layout_steps(
                 y_loc[0], base_key, step_ids, t_fracs,
-                edge_src=edge_src, edge_dst=edge_dst, edge_thr=edge_thr,
-                edge_alias=edge_alias, neg_thr=neg_thr, neg_alias=neg_alias,
+                edge_sampler=edge_sampler, neg_sampler=neg_sampler,
                 n_negatives=cfg.n_negatives, n_nodes=n_nodes,
                 prob_fn=cfg.prob_fn, a=cfg.prob_a, gamma=cfg.gamma,
                 clip=cfg.grad_clip, rho0=cfg.rho0, batch=batch,
@@ -124,10 +126,9 @@ def make_local_sgd_fns(mesh, cfg, n_nodes: int, *, batch: int):
 
         return shard_map(
             body, mesh=mesh,
-            in_specs=(dp_spec, rep, rep, rep, rep, rep, rep, rep, rep, rep),
+            in_specs=(dp_spec, rep, rep, rep, rep, rep),
             out_specs=dp_spec, check_vma=False,
-        )(y_rep, seed, t_frac0, dt_frac, edge_src, edge_dst, edge_thr,
-          edge_alias, neg_thr, neg_alias)
+        )(y_rep, seed, t_frac0, dt_frac, edge_sampler, neg_sampler)
 
     def sync(y_rep):
         """psum-average the replicas (the every-H synchronization)."""
@@ -162,13 +163,15 @@ def run_layout_local_sgd(key, edge_sampler: EdgeSampler,
     n_rounds = max(1, steps // H)
     local_steps, sync = make_local_sgd_fns(mesh, cfg, n_nodes, batch=batch)
     dt = 1.0 / max(steps, 1)
+    # one batched draw + one device->host transfer for ALL round seeds:
+    # deriving each round's seed with int(...) inside the loop forced a
+    # synchronous device round trip every H steps, serializing the rounds
+    seeds = np.asarray(jax.random.randint(kr, (n_rounds,), 0, 2**31 - 1,
+                                          dtype=jnp.int32))
     for r in range(n_rounds):
-        seed = jnp.asarray([int(jax.random.randint(
-            jax.random.fold_in(kr, r), (), 0, 2**31 - 1))], jnp.int32)
         y_rep = local_steps(
-            y_rep, seed, jnp.float32(r * H * dt), jnp.float32(dt),
-            edge_sampler.src, edge_sampler.dst, edge_sampler.threshold,
-            edge_sampler.alias, neg_sampler.threshold, neg_sampler.alias)
+            y_rep, jnp.asarray(seeds[r:r + 1]), jnp.float32(r * H * dt),
+            jnp.float32(dt), edge_sampler, neg_sampler)
         y_rep = sync(y_rep)
     return LayoutResult(y=y_rep[0], steps=n_rounds * H,
                         edge_samples=n_rounds * H * batch * n_dev)

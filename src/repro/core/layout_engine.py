@@ -8,7 +8,10 @@ module fuses the loop into the compiled program:
 
 * :func:`sgd_edge_step` — the single-step body (alias edge/negative sampling
   + fused gradient + one scatter-add), shared by every driver so the scanned
-  and per-step paths stay numerically identical.
+  and per-step paths stay numerically identical.  Samplers enter as the
+  :class:`~repro.core.sampler.EdgeSampler` / ``NodeSampler`` pytrees —
+  one argument per sampler threaded through ``jit``/``scan``/``shard_map``,
+  not six unpacked table arrays.
 * :func:`scan_layout_steps` — ``jax.lax.scan`` over the step body.  Used
   unjitted inside ``shard_map`` by the local-SGD drivers (replacing their
   hand-rolled ``fori_loop`` wiring) and jitted below for the single-device
@@ -30,7 +33,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import objective
-from repro.core.sampler import sample_alias
 from repro.kernels import ops
 
 # static hyper-parameters of the step body (everything that changes the
@@ -52,12 +54,8 @@ def sgd_edge_step(
     key,
     t_frac,
     *,
-    edge_src,
-    edge_dst,
-    edge_thr,
-    edge_alias,
-    neg_thr,
-    neg_alias,
+    edge_sampler,
+    neg_sampler,
     n_negatives: int,
     n_nodes: int,
     prob_fn: str = "inv_quadratic",
@@ -69,6 +67,12 @@ def sgd_edge_step(
     fused_step: bool = True,
 ):
     """One SGD step over a freshly sampled edge batch.  t_frac = t/T.
+
+    ``edge_sampler`` / ``neg_sampler`` are the :class:`~repro.core.sampler`
+    pytrees — one argument each instead of six unpacked table arrays, the
+    same signature for every driver (the sampled index stream is bitwise
+    identical to the unpacked form: ``EdgeSampler.sample`` is exactly the
+    old ``sample_alias`` + two gathers).
 
     Unjitted on purpose: ``core.layout.layout_step`` wraps it for per-step
     dispatch, :func:`scan_layout_steps` scans it, and the shard_map local-SGD
@@ -84,9 +88,8 @@ def sgd_edge_step(
     interleaved order, so their trajectories match bitwise.
     """
     ke, kn, _ = jax.random.split(key, 3)
-    e = sample_alias(ke, edge_thr, edge_alias, (batch,))
-    i, j = edge_src[e], edge_dst[e]
-    negs = sample_alias(kn, neg_thr, neg_alias, (batch, n_negatives))
+    i, j = edge_sampler.sample(ke, batch)
+    negs = neg_sampler.sample(kn, (batch, n_negatives))
     # mask collisions: negative == source or target of the positive edge
     neg_mask = ((negs != i[:, None]) & (negs != j[:, None])).astype(jnp.float32)
     lr = rho0 * jnp.maximum(1.0 - t_frac, 1e-4)
@@ -146,12 +149,8 @@ def layout_chunk(
     step_ids,
     t_fracs,
     *,
-    edge_src,
-    edge_dst,
-    edge_thr,
-    edge_alias,
-    neg_thr,
-    neg_alias,
+    edge_sampler,
+    neg_sampler,
     n_negatives: int,
     n_nodes: int,
     prob_fn: str = "inv_quadratic",
@@ -172,12 +171,8 @@ def layout_chunk(
         base_key,
         step_ids,
         t_fracs,
-        edge_src=edge_src,
-        edge_dst=edge_dst,
-        edge_thr=edge_thr,
-        edge_alias=edge_alias,
-        neg_thr=neg_thr,
-        neg_alias=neg_alias,
+        edge_sampler=edge_sampler,
+        neg_sampler=neg_sampler,
         n_negatives=n_negatives,
         n_nodes=n_nodes,
         prob_fn=prob_fn,

@@ -7,7 +7,11 @@ sequential per-point search is embarrassingly parallel).
 
 Symmetrization w_ij = (p_{j|i} + p_{i|j}) / 2N needs the reverse weight
 p_{i|j}: for each directed edge (i, j) we look up i inside knn(j) — a tiled
-(T, K, K) gather + compare, no host round-trips.
+(T, K, K) gather + compare.  The tile loop is a ``lax.scan`` inside ONE
+module-level jit (``_symmetrize_scan``), so ``symmetrize`` compiles once
+per (N, K, tile) and never re-traces per call or per tile — the earlier
+form re-created a ``jax.jit`` wrapper on every call and dispatched one
+device round trip per tile.
 """
 from __future__ import annotations
 
@@ -15,7 +19,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @functools.partial(jax.jit, static_argnames=("iters",))
@@ -59,18 +62,30 @@ def _reverse_p_tile(knn_idx, p, rows):
     return jnp.sum(jnp.where(hit, pj, 0.0), axis=-1)      # (T, K)
 
 
+@functools.partial(jax.jit, static_argnames=("tile",))
+def _symmetrize_scan(knn_idx: jax.Array, p: jax.Array, *,
+                     tile: int) -> jax.Array:
+    """One compiled computation: scan `_reverse_p_tile` over row tiles.
+
+    Rows are padded to a whole number of tiles with clamped (N-1) indices
+    whose outputs are sliced off — every real row sees the identical
+    per-row gather/compare/sum the unpadded tile would produce."""
+    N, K = knn_idx.shape
+    n_tiles = -(-N // tile)
+    rows = jnp.minimum(jnp.arange(n_tiles * tile, dtype=jnp.int32), N - 1)
+
+    def body(_, rows_t):
+        return None, _reverse_p_tile(knn_idx, p, rows_t)
+
+    _, rev = jax.lax.scan(body, None, rows.reshape(n_tiles, tile))
+    rev = rev.reshape(n_tiles * tile, K)[:N]
+    return (p + rev) / (2.0 * N)
+
+
 def symmetrize(knn_idx: jax.Array, p: jax.Array, *,
                tile: int = 4096) -> jax.Array:
     """w_ij = (p_{j|i} + p_{i|j}) / (2N) per directed edge slot (Eqn 2)."""
-    N, K = knn_idx.shape
-    tile = min(tile, N)
-    fn = jax.jit(_reverse_p_tile)
-    outs = []
-    for lo in range(0, N, tile):
-        rows = jnp.arange(lo, min(lo + tile, N), dtype=jnp.int32)
-        outs.append(fn(knn_idx, p, rows))
-    rev = jnp.concatenate(outs)
-    return (p + rev) / (2.0 * N)
+    return _symmetrize_scan(knn_idx, p, tile=int(min(tile, knn_idx.shape[0])))
 
 
 def edge_weights(knn_idx, knn_sqdist, perplexity: float, *,

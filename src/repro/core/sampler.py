@@ -1,14 +1,46 @@
 """Alias-method samplers: O(1) weighted edge sampling + noise-distribution
 negative sampling (paper §3.2, Mikolov-style P_n(j) ∝ d_j^0.75).
 
-Tables are built once on host (numpy, O(n)); sampling on device is two
-gathers + a compare per draw, fully batched.  Edge sampling ∝ w_ij is the
-paper's variance fix: sampled edges are treated as *binary*, so divergent
-edge weights never enter the gradient.
+Sampling on device is two gathers + a compare per draw, fully batched.
+Edge sampling ∝ w_ij is the paper's variance fix: sampled edges are treated
+as *binary*, so divergent edge weights never enter the gradient.
+
+Table construction comes in two implementations, selected by ``impl=``
+(``LargeVisConfig.sampler_impl`` at the pipeline level):
+
+* ``"device"`` (the ``"auto"`` default) — :func:`build_alias_device`, a
+  fully-jitted construction: stable-partition the scaled probabilities
+  into smalls (< 1) and larges (>= 1) with cumsum ranks (no sort — the
+  pairing below only needs the two groups in *some* fixed order, so the
+  build is O(E) data movement plus O(E log E) binary searches), then
+  resolve Vose's two-pointer pairing with prefix sums + ``searchsorted``
+  — smalls alias to the first large whose cumulative surplus covers
+  their cumulative deficit, and the boundary-straddling remainders flow
+  between adjacent larges through a backward alias chain, which makes
+  the per-slot marginals *exact* in exact arithmetic.  The cumulative
+  arithmetic runs in f64 via a trace-scoped ``enable_x64`` on CPU/GPU
+  (f32 prefix sums break down around E ~ 1e5 — see ``_alias_pairing``),
+  falling back to f32 on TPU.  No per-edge Python iteration, no host
+  round trip: stage-1 outputs stay device-resident all the way into the
+  layout step.
+* ``"host"`` — :func:`build_alias`, the classic numpy Vose loop.  O(E)
+  but single-core Python (minutes at the paper's E = N*K = 150M); kept as
+  the test oracle and debug path.
+
+The produced (threshold, alias) tables differ between implementations —
+any table with the right per-index marginals is a valid alias table — but
+both are exact, and ``tests/test_sampler.py`` pins the device builder's
+marginals against the Vose oracle via threshold/alias reconstruction.
+
+:class:`EdgeSampler` / :class:`NodeSampler` are registered JAX pytrees, so
+whole samplers thread through ``jit`` / ``lax.scan`` / ``shard_map`` as
+single arguments (see ``core/layout_engine.py``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +48,11 @@ import numpy as np
 
 
 def build_alias(probs: np.ndarray):
-    """Vose's alias method.  probs: (n,) nonnegative, any scale.
-    Returns (threshold (n,) f32, alias (n,) i32)."""
+    """Vose's alias method on host.  probs: (n,) nonnegative, any scale.
+    Returns (threshold (n,) f32, alias (n,) i32).
+
+    Pure-Python O(n) loop — the oracle the jitted device builder is tested
+    against, and the ``impl="host"`` debug path."""
     p = np.asarray(probs, np.float64)
     n = p.shape[0]
     assert n > 0 and (p >= 0).all()
@@ -41,6 +76,114 @@ def build_alias(probs: np.ndarray):
     return threshold.astype(np.float32), alias
 
 
+def _alias_pairing(probs: jax.Array, *, hi_dtype=jnp.float32):
+    """Traced alias-table construction body.  probs: (n,) nonnegative, any
+    scale (all-zero input falls back to uniform).  Returns
+    (threshold (n,) f32, alias (n,) i32) with exact per-index marginals.
+
+    Construction (fully vectorized — cumsum/searchsorted/scatter, zero
+    host involvement): stable-partition the scaled probabilities so the
+    smalls (s < 1, deficit d = 1-s) occupy a prefix and the larges
+    (s >= 1, surplus e = s-1) a suffix.  The partition is cumsum ranks,
+    NOT a sort — Vose's pairing works for the two groups in any fixed
+    order, since the prefix arrays below are monotone by construction.
+    The pairing becomes:
+
+    * small i aliases the first large j whose cumulative surplus SE_j
+      reaches the cumulative deficit D_i (one ``searchsorted``);
+    * a small straddling a surplus boundary is charged wholly to the later
+      large, so larges <= j under-collect by beta_{j+1} = SE_j - D_{last
+      small with D <= SE_j}; large j+1 repays exactly that by keeping only
+      threshold 1 - beta_{j+1} of its own slot and aliasing the remainder
+      to large j (a backward chain over the partitioned larges).
+
+    Telescoping the chain gives every index its exact target mass; the
+    final boundary term is total-surplus - total-deficit = 0, so nothing
+    is lost.  Ties, zero-surplus larges, zero probabilities, and n == 1
+    all degenerate correctly (clamps only guard rounding).
+
+    ``hi_dtype`` is the cumulative-arithmetic dtype.  The prefix sums
+    reach magnitude ~n with sub-1.0 increments, and beta is a
+    catastrophically-cancelling difference of two such prefixes — in f32
+    the per-slot *relative* marginal error passes 100% around E ~ 1e5.
+    :func:`_pairing_scope` therefore runs this in f64 wherever the
+    backend supports it (CPU/GPU), keeping f32 only as the TPU fallback.
+    """
+    p = jnp.asarray(probs, jnp.float32).reshape(-1).astype(hi_dtype)
+    n = p.shape[0]
+    one = jnp.asarray(1.0, hi_dtype)
+    zero = jnp.zeros((), hi_dtype)
+    p = jnp.maximum(p, zero)
+    total = jnp.sum(p)
+    p = jnp.where(total > 0, p, jnp.ones_like(p))
+    total = jnp.where(total > 0, total, jnp.asarray(n, hi_dtype))
+    scaled = p * (n / total)
+
+    # stable partition, smalls first: O(n) cumsum ranks + one scatter
+    is_small = scaled < one
+    m = jnp.sum(is_small.astype(jnp.int32))      # partition point / first
+    rank_small = jnp.cumsum(is_small.astype(jnp.int32)) - 1       # large
+    rank_large = m + jnp.cumsum((~is_small).astype(jnp.int32)) - 1
+    dest = jnp.where(is_small, rank_small, rank_large)
+    order = jnp.zeros(n, jnp.int32).at[dest].set(
+        jnp.arange(n, dtype=jnp.int32))          # partitioned -> original
+    ss = scaled[order]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    small = pos < m
+    d = jnp.where(small, one - ss, zero)         # deficits  (small prefix)
+    e = jnp.where(small, zero, ss - one)         # surpluses (large suffix)
+    D = jnp.cumsum(d)
+    SE = jnp.cumsum(e)
+
+    # smalls -> first large whose cumulative surplus covers their deficit
+    tgt = jnp.clip(jnp.searchsorted(SE, D, side="left").astype(jnp.int32),
+                   m, n - 1)
+    # larges: beta_j = straddling deficit owed to earlier larges, repaid by
+    # this slot's alias pointing at the previous large
+    prev_se = SE - e                             # SE_{j-1}
+    hi = jnp.searchsorted(D, prev_se, side="right").astype(jnp.int32) - 1
+    covered = jnp.where(hi >= 0, D[jnp.clip(hi, 0, n - 1)], zero)
+    beta = jnp.clip(prev_se - covered, 0.0, 1.0)
+
+    thr_sorted = jnp.where(small, ss, one - beta).astype(jnp.float32)
+    alias_sorted = jnp.where(small, order[tgt],
+                             order[jnp.clip(pos - 1, m, n - 1)])
+    threshold = jnp.zeros(n, jnp.float32).at[order].set(thr_sorted)
+    alias = jnp.zeros(n, jnp.int32).at[order].set(
+        alias_sorted.astype(jnp.int32))
+    return threshold, alias
+
+
+_alias_jit = jax.jit(_alias_pairing, static_argnames=("hi_dtype",))
+
+
+def _pairing_scope():
+    """(context manager, dtype) for the pairing's cumulative arithmetic.
+
+    CPU/GPU: a trace-scoped ``enable_x64`` so the prefix sums run in f64
+    (exact marginals at any E) without requiring global x64 mode.  TPU
+    has no native f64, so it keeps the f32 construction — a KNOWN
+    LIMITATION: per-slot relative marginal error grows with E (~65% at
+    E=1e5, >100% at E>=1e6; past E ~ 1e7 the beta cancellation loses all
+    precision), so large-E TPU runs should build tables on the host CPU
+    platform (``sampler_impl="host"``, or a CPU-backed device build) until
+    a compensated-summation f32 pairing lands.  Builders enter this scope
+    at the top level and trace entirely under it; it must not nest inside
+    an outer non-x64 jit trace."""
+    if jax.default_backend() == "tpu":
+        return contextlib.nullcontext(), jnp.float32
+    return jax.experimental.enable_x64(), jnp.float64
+
+
+def build_alias_device(probs) -> tuple:
+    """One jitted device computation: probs -> (threshold f32, alias i32).
+    See :func:`_alias_pairing` for the construction and dtype policy."""
+    scope, hi_dtype = _pairing_scope()
+    probs = jnp.asarray(probs)
+    with scope:
+        return _alias_jit(probs, hi_dtype=hi_dtype)
+
+
 def sample_alias(key, threshold: jax.Array, alias: jax.Array, shape):
     """Batched alias draws -> int32 indices of the given shape."""
     n = threshold.shape[0]
@@ -50,9 +193,29 @@ def sample_alias(key, threshold: jax.Array, alias: jax.Array, shape):
     return jnp.where(u < threshold[idx], idx, alias[idx]).astype(jnp.int32)
 
 
+def _register_pytree(cls, data_fields, meta_fields):
+    """Dataclass -> pytree with array leaves and static metadata.
+
+    Uses register_pytree_node directly (register_dataclass signatures
+    drift across the supported jax range)."""
+    def flatten(obj):
+        return (tuple(getattr(obj, f) for f in data_fields),
+                tuple(getattr(obj, f) for f in meta_fields))
+
+    def unflatten(meta, data):
+        return cls(*data, *meta)
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
 @dataclasses.dataclass
 class EdgeSampler:
-    """Directed edge list (src, dst) with alias table over edge weights."""
+    """Directed edge list (src, dst) with alias table over edge weights.
+
+    A registered pytree: ``src/dst/threshold/alias`` are leaves,
+    ``n_edges`` is static metadata — pass whole samplers through
+    ``jit``/``scan``/``shard_map``."""
     src: jax.Array          # (E,) int32
     dst: jax.Array          # (E,) int32
     threshold: jax.Array    # (E,) f32
@@ -66,7 +229,8 @@ class EdgeSampler:
 
 @dataclasses.dataclass
 class NodeSampler:
-    """Noise distribution over nodes, P_n(j) ∝ deg_j^power."""
+    """Noise distribution over nodes, P_n(j) ∝ deg_j^power.  A registered
+    pytree (``n_nodes`` static)."""
     threshold: jax.Array
     alias: jax.Array
     n_nodes: int
@@ -75,8 +239,51 @@ class NodeSampler:
         return sample_alias(key, self.threshold, self.alias, shape)
 
 
-def build_edge_sampler(knn_idx, weights) -> EdgeSampler:
-    """knn_idx/weights: (N, K) directed graph -> flat edge sampler."""
+_register_pytree(EdgeSampler, ("src", "dst", "threshold", "alias"),
+                 ("n_edges",))
+_register_pytree(NodeSampler, ("threshold", "alias"), ("n_nodes",))
+
+
+def _resolve_impl(impl: str) -> str:
+    if impl not in ("auto", "device", "host"):
+        raise ValueError(f"sampler impl must be auto|device|host: {impl!r}")
+    return "device" if impl == "auto" else impl
+
+
+@functools.partial(jax.jit, static_argnames=("hi_dtype",))
+def _build_edge_sampler_device(knn_idx, weights, *,
+                               hi_dtype=jnp.float32) -> EdgeSampler:
+    N, K = knn_idx.shape
+    src = jnp.repeat(jnp.arange(N, dtype=jnp.int32), K)
+    dst = knn_idx.reshape(-1).astype(jnp.int32)
+    thr, alias = _alias_pairing(weights.reshape(-1), hi_dtype=hi_dtype)
+    return EdgeSampler(src, dst, thr, alias, N * K)
+
+
+@functools.partial(jax.jit, static_argnames=("power", "hi_dtype"))
+def _build_negative_sampler_device(knn_idx, weights, *, power: float,
+                                   hi_dtype=jnp.float32) -> NodeSampler:
+    N, _ = knn_idx.shape
+    w = jnp.maximum(weights.astype(jnp.float32), 0.0)
+    deg = jnp.sum(w, axis=1)                              # out-degree
+    deg = deg.at[knn_idx.reshape(-1)].add(w.reshape(-1))  # + in-degree
+    thr, alias = _alias_pairing(jnp.maximum(deg, 1e-12) ** power,
+                                hi_dtype=hi_dtype)
+    return NodeSampler(thr, alias, N)
+
+
+def build_edge_sampler(knn_idx, weights, *, impl: str = "auto") -> EdgeSampler:
+    """knn_idx/weights: (N, K) directed graph -> flat edge sampler.
+
+    ``impl="device"`` (the ``"auto"`` default) builds the alias table
+    on device in one jitted computation — the (N, K) graph never touches
+    the host.  ``impl="host"`` is the numpy Vose oracle."""
+    if _resolve_impl(impl) == "device":
+        knn_idx, weights = jnp.asarray(knn_idx), jnp.asarray(weights)
+        scope, hi_dtype = _pairing_scope()
+        with scope:
+            return _build_edge_sampler_device(knn_idx, weights,
+                                              hi_dtype=hi_dtype)
     N, K = knn_idx.shape
     src = np.repeat(np.arange(N, dtype=np.int32), K)
     dst = np.asarray(knn_idx, np.int32).reshape(-1)
@@ -89,9 +296,17 @@ def build_edge_sampler(knn_idx, weights) -> EdgeSampler:
                        jnp.asarray(thr), jnp.asarray(alias), len(src))
 
 
-def build_negative_sampler(knn_idx, weights, *,
-                           power: float = 0.75) -> NodeSampler:
-    """Weighted degree d_j = sum_i w_ij (directed, in+out), then ^power."""
+def build_negative_sampler(knn_idx, weights, *, power: float = 0.75,
+                           impl: str = "auto") -> NodeSampler:
+    """Weighted degree d_j = sum_i w_ij (directed, in+out), then ^power.
+    ``impl`` as in :func:`build_edge_sampler`."""
+    if _resolve_impl(impl) == "device":
+        knn_idx, weights = jnp.asarray(knn_idx), jnp.asarray(weights)
+        scope, hi_dtype = _pairing_scope()
+        with scope:
+            return _build_negative_sampler_device(knn_idx, weights,
+                                                  power=power,
+                                                  hi_dtype=hi_dtype)
     N, K = knn_idx.shape
     w = np.asarray(weights, np.float64)
     deg = w.sum(axis=1)                                   # out-degree

@@ -188,9 +188,15 @@ def make_largevis_step_local(mesh, *, n_nodes: int, n_edges: int,
     of the paper's async SGD (DESIGN.md §2).
 
     The H local steps are one scanned loop (``layout_engine``), the same
-    body the single-device engine dispatches.
+    body the single-device engine dispatches.  The wire format stays six
+    flat table arrays (the dry-run lowering interface needs per-array
+    shardings: edge tables shard over DP, node tables replicate); the
+    body immediately reassembles them into the sampler pytrees the shared
+    ``sgd_edge_step`` signature takes — each device's local
+    ``EdgeSampler`` covers exactly its edge shard.
     """
     from repro.core.layout_engine import scan_layout_steps
+    from repro.core.sampler import EdgeSampler, NodeSampler
 
     dp = sh.dp_axes(mesh)
     n_shards = 1
@@ -207,13 +213,14 @@ def make_largevis_step_local(mesh, *, n_nodes: int, n_edges: int,
             if len(dp) > 1:
                 dev = dev + mesh.shape[dp[-1]] * jax.lax.axis_index(dp[0])
             y0 = y
+            es = EdgeSampler(esrc, edst, ethr, eali, int(esrc.shape[0]))
+            ns = NodeSampler(nthr, nali, n_nodes)
             base_key = jax.random.fold_in(jax.random.key(seed[0]), dev)
             step_ids = jnp.arange(sync_every, dtype=jnp.int32)
             y = scan_layout_steps(
                 y, base_key, step_ids,
                 jnp.broadcast_to(t_frac, (sync_every,)).astype(jnp.float32),
-                edge_src=esrc, edge_dst=edst, edge_thr=ethr, edge_alias=eali,
-                neg_thr=nthr, neg_alias=nali, n_negatives=n_negatives,
+                edge_sampler=es, neg_sampler=ns, n_negatives=n_negatives,
                 n_nodes=n_nodes, batch=b_loc, fused_step=fused_step)
             # merge replicas: average the deltas (one psum per H steps)
             return y0 + jax.lax.pmean(y - y0, dp)
@@ -240,8 +247,11 @@ def make_largevis_step(mesh, *, n_nodes: int, n_edges: int, batch: int,
                        out_dim: int = 2, n_negatives: int = 5):
     """Sharded layout step: edge batch over DP axes, embedding table
     replicated below 10M nodes (N x 2 f32 is tiny), grads combined by
-    scatter-add.  Returns the same 4-tuple as the LM builders."""
+    scatter-add.  Returns the same 4-tuple as the LM builders.  Flat
+    table arrays on the wire (per-array shardings), sampler pytrees
+    inside — same shared step signature as every other driver."""
     from repro.core.layout import layout_step
+    from repro.core.sampler import EdgeSampler, NodeSampler
 
     dp = sh.dp_axes(mesh)
     f32, i32 = jnp.float32, jnp.int32
@@ -259,11 +269,11 @@ def make_largevis_step(mesh, *, n_nodes: int, n_edges: int, batch: int,
     def step(y, seed, t_frac, edge_src, edge_dst, edge_thr, edge_alias,
              neg_thr, neg_alias):
         key = jax.random.key(seed[0])
+        es = EdgeSampler(edge_src, edge_dst, edge_thr, edge_alias, n_edges)
+        ns = NodeSampler(neg_thr, neg_alias, n_nodes)
         return layout_step(
-            y, key, t_frac, edge_src=edge_src, edge_dst=edge_dst,
-            edge_thr=edge_thr, edge_alias=edge_alias, neg_thr=neg_thr,
-            neg_alias=neg_alias, n_negatives=n_negatives, n_nodes=n_nodes,
-            batch=batch)
+            y, key, t_frac, edge_sampler=es, neg_sampler=ns,
+            n_negatives=n_negatives, n_nodes=n_nodes, batch=batch)
 
     rep = NamedSharding(mesh, P())
     table = NamedSharding(mesh, sh._guard(mesh, (n_edges,), [dp]))
