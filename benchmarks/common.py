@@ -34,6 +34,27 @@ def dataset(name: str, n: int, key=None):
     raise KeyError(name)
 
 
+def best_of_interleaved(fns, repeats: int):
+    """Best-of-``repeats`` per fn, *alternating* fns every round.
+
+    Machine-load drift over tens of seconds is the dominant noise source
+    for comparison rows on a shared CPU; back-to-back repeats of one
+    config land entirely inside one load regime and make cross-config
+    ratios meaningless.  Interleaving spreads every config across the
+    same load windows, so the per-config minima are comparable.  Each fn
+    gets one untimed warmup call first (compile time never lands in a
+    number).  Returns (outs, best_seconds), one entry per fn.
+    """
+    outs = [jax.block_until_ready(f()) for f in fns]   # warmup / compile
+    best = [float("inf")] * len(fns)
+    for _ in range(repeats):
+        for f_i, f in enumerate(fns):
+            t0 = time.time()
+            outs[f_i] = jax.block_until_ready(f())
+            best[f_i] = min(best[f_i], time.time() - t0)
+    return outs, best
+
+
 def timed(fn, *args, repeats: int = 1, warmup: int = 1, **kw):
     """(result, best_seconds) with jax block_until_ready.
 

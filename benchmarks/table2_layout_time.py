@@ -23,12 +23,11 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import Rows, dataset, timed
+from benchmarks.common import Rows, best_of_interleaved, dataset, timed
 from repro.configs.largevis_default import LargeVisConfig
 from repro.core import sampler as sampler_lib
 from repro.core.layout import run_layout
@@ -51,26 +50,6 @@ def _synthetic_graph_samplers(n: int, k: int = 10, seed: int = 0):
     es = sampler_lib.build_edge_sampler(idx, w)
     ns = sampler_lib.build_negative_sampler(idx, w)
     return es, ns
-
-
-def _best_of_interleaved(fns, repeats: int):
-    """Best-of-``repeats`` per fn, *alternating* fns every round.
-
-    Machine-load drift over tens of seconds is the dominant noise source
-    for these rows on a shared CPU; back-to-back repeats of one config
-    land entirely inside one load regime and make cross-config ratios
-    meaningless.  Interleaving spreads every config across the same load
-    windows, so the per-config minima are comparable.  Each fn gets one
-    untimed warmup call first (compile time never lands in a number).
-    """
-    outs = [f() for f in fns]                     # warmup / compile
-    best = [float("inf")] * len(fns)
-    for _ in range(repeats):
-        for f_i, f in enumerate(fns):
-            t0 = time.time()
-            outs[f_i] = f()
-            best[f_i] = min(best[f_i], time.time() - t0)
-    return outs, best
 
 
 def engine_rows(rows: Rows, ns=ENGINE_NS):
@@ -102,7 +81,7 @@ def engine_rows(rows: Rows, ns=ENGINE_NS):
             return r
 
         (r_loop, r_scan, r_fused), (secs_loop, secs_scan, secs_fused) = (
-            _best_of_interleaved(
+            best_of_interleaved(
                 [lambda: run_blocked(cfg_loop),
                  lambda: run_blocked(cfg_scan),
                  lambda: run_blocked(cfg_fused)], repeats=3))

@@ -23,6 +23,10 @@ class LargeVisConfig:
     window: int = 64                # sorted-window candidate half-width
     explore_sample: int = 0         # 0 -> auto (candidates per explore iter)
     rp_mode: str = "hash"           # "hash" (matmul, TPU-native) | "tree"
+    knn_impl: str = "auto"          # streaming distance->top-k routing
+    #   (kernels/ops.py::topk_sqdist): "fused"/"pallas" = the Pallas
+    #   kernel, "ref" = the streaming jnp oracle, "auto" = kernel on TPU
+    #   / oracle elsewhere (bit-identical at equal tiles)
     perplexity: float = 50.0        # u in Eqn (1)
     perplexity_iters: int = 64      # bisection steps for sigma_i
     # --- distributed graph construction (core/knn_sharded.py) ---

@@ -15,13 +15,20 @@ with neighbor exploring.  Pointer-chasing trees don't map to TPU, so the
                    closer to the paper's RP trees; hyperplanes are sampled
                    from global point pairs.
 
-Both produce per-tree candidates merged by a dedup'd top-k.
+All distance->top-k work routes through the streaming fused kernel
+(``kernels.ops.topk_sqdist``): each (bm, bn) distance tile folds into a
+running (bm, k) best state, so no path here materializes an (M, N)
+distance matrix or a post-hoc top_k/merge pass.  ``forest_knn`` scans the
+stacked tree codes with the running top-k as carry — one compiled tree
+body regardless of n_trees, with cross-tree duplicate suppression done
+in-fold (``dedup=True``).
 
 Multi-device: `core/knn_sharded.py` builds the same graph with the point
-set sharded over the mesh "data" axis — per-shard codes, ring-streamed
-`pairwise_sqdist` candidate tiles with a running top-k (peak buffers
-(N/P, N/P), never (N, N)), and a sharded neighbor-exploring driver.
-`build_knn_graph` dispatches there when ``cfg.distributed`` is set.
+set sharded over the mesh "data" axis — per-shard codes and ring-streamed
+`topk_sqdist` calls whose running state is carried across ring steps
+(peak buffers (N/P, N/P), never (N, N)), plus a sharded
+neighbor-exploring driver.  `build_knn_graph` dispatches there when
+``cfg.distributed`` is set.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from repro.kernels import ref as ref_lib
 
 INF = jnp.float32(3.4e38)
 
@@ -40,37 +48,26 @@ INF = jnp.float32(3.4e38)
 # Exact oracle
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k", "tile"))
-def brute_force_knn(x: jax.Array, k: int, *, tile: int = 4096):
+@functools.partial(jax.jit, static_argnames=("k", "tile", "impl"))
+def brute_force_knn(x: jax.Array, k: int, *, tile: int = 2048,
+                    impl: str = "auto"):
     """Exact KNN.  Returns (idx (N,k) int32, sqdist (N,k) f32).
 
-    One dispatch: row tiles go through ``jax.lax.map`` inside the jit, so
-    the oracle's timing (it is the fig2 baseline) measures distance work,
-    not a Python loop's per-tile dispatch latency.  Rows are zero-padded to
-    a tile multiple; padded rows never survive the final slice.
+    One fused dispatch: ``ops.topk_sqdist(x, x, k)`` streams column tiles
+    of the point set into a running top-k per row tile — the (t, N)
+    distance buffer of the old materialize-then-top_k formulation never
+    exists.  ``tile`` is the row-tile height (bm); self-edges are masked
+    in-fold via a_ids == b_ids.
     """
     N, d = x.shape
     k = min(int(k), N - 1)
-    t = min(tile, N)
-    n_tiles = -(-N // t)
-    xp = jnp.pad(x, ((0, n_tiles * t - N), (0, 0)))
-    col = jnp.arange(N)
-
-    def one_tile(args):
-        xa, start = args
-        dd = ops.pairwise_sqdist(xa, x)                   # (t, N)
-        rows = start + jnp.arange(t)
-        dd = jnp.where(col[None, :] == rows[:, None], INF, dd)
-        nd, ni = jax.lax.top_k(-dd, k)
-        return ni.astype(jnp.int32), -nd
-
-    idx, dist = jax.lax.map(
-        one_tile, (xp.reshape(n_tiles, t, d), jnp.arange(n_tiles) * t))
-    return idx.reshape(n_tiles * t, k)[:N], dist.reshape(n_tiles * t, k)[:N]
+    ids = jnp.arange(N, dtype=jnp.int32)
+    return ops.topk_sqdist(x, x, k, a_ids=ids, b_ids=ids,
+                           bm=min(tile, N), impl=impl)
 
 
 # ---------------------------------------------------------------------------
-# Candidate merging
+# Candidate merging (gather-based candidate lists, e.g. neighbor exploring)
 # ---------------------------------------------------------------------------
 
 def merge_candidates(ids: jax.Array, dists: jax.Array, k: int,
@@ -79,6 +76,13 @@ def merge_candidates(ids: jax.Array, dists: jax.Array, k: int,
 
     ids: (R, C) int32; dists: (R, C) f32.  Duplicates (same id twice in a
     row) and self-edges get +inf distance.  Returns (idx (R,k), dist (R,k)).
+
+    This is the merge for *gather-based* candidate lists (neighbor
+    exploring), where the same id can appear many times within one row —
+    the argsort-by-id pass suppresses all copies.  Tile-structured
+    distance work (brute force, window candidates, the sharded ring) goes
+    through ``ops.topk_sqdist`` instead, which folds tiles into a running
+    state without any argsort.
     """
     R, C = ids.shape
     if self_idx is not None:
@@ -143,68 +147,92 @@ def tree_codes(x: jax.Array, key, n_trees: int, depth: int) -> jax.Array:
     return jnp.stack(codes, axis=1)                       # (N, NT)
 
 
-def _window_candidates_one_tree(x: jax.Array, code: jax.Array, k: int,
-                                window: int):
-    """Sorted-window candidates for one tree.  Returns (idx, dist) (N,k)."""
+def _window_fold_one_tree(x: jax.Array, code: jax.Array, k: int,
+                          window: int, run_ids: jax.Array,
+                          run_d: jax.Array, impl: str):
+    """Fold one tree's sorted-window candidates into the running top-k.
+
+    Points sort by bucket code; each W-block tiles directly against its
+    ±window neighborhood (3W rows) through ``ops.topk_sqdist``, seeded
+    with the running (k) state of the block's rows — the (N, k+1)
+    per-tree candidate buffer and the argsort-based merge of the old
+    formulation never materialize.  Self-edges mask in-fold (no k+1
+    over-fetch); the boundary blocks' duplicated neighbor segment (block
+    0's "lo" is itself, block nb-1's "hi" is itself) is invalidated by
+    id=-1 so no candidate is ever offered twice within a tile, and
+    cross-tree duplicates are suppressed against the running state
+    (``dedup=True``).  Returns the merged (idx, dist) in original index
+    order.
+    """
     N, d = x.shape
-    W = window
-    order = jnp.argsort(code)                             # (N,) sorted->orig
+    W = min(window, N)
+    order = jnp.argsort(code).astype(jnp.int32)           # (N,) sorted->orig
     Np = int(np.ceil(N / W)) * W
     pad = Np - N
     order_p = jnp.concatenate(
-        [order, jnp.full((pad,), N, jnp.int32)]) if pad else order
-    xs = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)])[order_p]
+        [order, jnp.full((pad,), -1, jnp.int32)]) if pad else order
+    safe = jnp.clip(order_p, 0, N - 1)
+    xs = x[safe]                                          # (Np, d)
+    st_i = jnp.where(order_p[:, None] >= 0, run_ids[safe], -1)
+    st_d = jnp.where(order_p[:, None] >= 0, run_d[safe],
+                     ref_lib.INVALID_DIST)
     nb = Np // W
     blocks = xs.reshape(nb, W, d)
     ids = order_p.reshape(nb, W)
 
-    def block_dists(j):
-        a = blocks[j]                                      # (W, d)
+    def block_fold(j):
         lo = jnp.clip(j - 1, 0, nb - 1)
         hi = jnp.clip(j + 1, 0, nb - 1)
-        b = jnp.concatenate([blocks[lo], blocks[j], blocks[hi]])   # (3W, d)
-        bid = jnp.concatenate([ids[lo], ids[j], ids[hi]])
-        dd = ops.pairwise_sqdist(a, b)                     # (W, 3W)
-        dd = jnp.where(bid[None, :] == N, INF, dd)         # padding
-        kk = min(k + 1, 3 * W)
-        nd, ni = jax.lax.top_k(-dd, kk)
-        return bid[ni], -nd                                # (W,kk)
+        bx = jnp.concatenate([blocks[lo], blocks[j], blocks[hi]])  # (3W, d)
+        bid = jnp.concatenate([
+            jnp.where(j == 0, -1, ids[lo]),               # lo==j dup at j=0
+            ids[j],
+            jnp.where(j == nb - 1, -1, ids[hi]),          # hi==j dup at end
+        ])
+        rows = jax.lax.dynamic_slice_in_dim(st_i.reshape(nb, W, -1), j, 1)
+        rd = jax.lax.dynamic_slice_in_dim(st_d.reshape(nb, W, -1), j, 1)
+        return ops.topk_sqdist(
+            blocks[j], bx, k, a_ids=ids[j], b_ids=bid,
+            init_ids=rows[0], init_dists=rd[0], dedup=True,
+            bm=W, bn=3 * W, impl=impl)
 
-    cid, cd = jax.lax.map(block_dists, jnp.arange(nb))
-    kk = cid.shape[-1]
-    flat_ids = cid.reshape(Np, kk)[:N]
-    flat_d = cd.reshape(Np, kk)[:N]
+    cid, cd = jax.lax.map(block_fold, jnp.arange(nb))
+    flat_ids = cid.reshape(Np, k)[:N]
+    flat_d = cd.reshape(Np, k)[:N]
     # rows are in sorted order; scatter back to original index space
-    inv = jnp.zeros((N,), jnp.int32).at[order].set(jnp.arange(N, dtype=jnp.int32))
+    inv = jnp.zeros((N,), jnp.int32).at[order].set(
+        jnp.arange(N, dtype=jnp.int32))
     return flat_ids[inv], flat_d[inv]
 
 
 @functools.partial(jax.jit, static_argnames=("n_trees", "depth", "k",
-                                             "window", "rp_mode"))
+                                             "window", "rp_mode", "impl"))
 def forest_knn(x: jax.Array, key, *, n_trees: int, depth: int, k: int,
-               window: int, rp_mode: str = "hash"):
+               window: int, rp_mode: str = "hash", impl: str = "auto"):
     """Initial approximate KNN from the projection forest.
 
-    Trees stream through a running ``merge_candidates`` top-k: each tree's
-    (N, k+1) window candidates merge into the running (N, k) result, so the
-    peak candidate buffer is (N, 2k+1) instead of the (N, n_trees*(k+1))
-    all-trees concat — ~n_trees x less memory for the same output (top-k
-    with id-dedup is associative: discarding a non-top-k candidate early
-    never evicts a final neighbor, and a duplicate id carries the same
-    distance from every tree).
+    One ``lax.scan`` over the stacked (n_trees, N) tree codes with the
+    running (N, k) top-k as carry: the compiled program contains a single
+    tree body regardless of n_trees (the old Python loop unrolled it
+    n_trees times into the HLO), and peak candidate memory is the (W, 3W)
+    window tile plus the (N, k) state — never an all-trees concat.
+    Streaming a non-survivor out early never evicts a final neighbor
+    (top-k with id-dedup is associative), so the scan is equivalent to
+    the batch merge.
     """
     N = x.shape[0]
     codes = (hash_codes if rp_mode == "hash" else tree_codes)(
         x, key, n_trees, depth)
-    self_idx = jnp.arange(N)
-    run_ids = run_d = None
-    for t in range(n_trees):
-        cid, cd = _window_candidates_one_tree(x, codes[:, t], k, window)
-        if run_ids is not None:
-            cid = jnp.concatenate([run_ids, cid], axis=1)
-            cd = jnp.concatenate([run_d, cd], axis=1)
-        run_ids, run_d = merge_candidates(cid, cd, k, self_idx=self_idx)
-    return run_ids, run_d
+
+    def one_tree(carry, code):
+        run_ids, run_d = carry
+        return _window_fold_one_tree(x, code, k, window, run_ids, run_d,
+                                     impl), None
+
+    init = (jnp.full((N, k), -1, jnp.int32),
+            jnp.full((N, k), ref_lib.INVALID_DIST, jnp.float32))
+    (idx, dist), _ = jax.lax.scan(one_tree, init, codes.T)
+    return idx, dist
 
 
 def build_knn_graph(x: jax.Array, key, cfg):
@@ -223,7 +251,8 @@ def build_knn_graph(x: jax.Array, key, cfg):
     depth = cfg.tree_depth or _auto_depth(N, cfg.leaf_target)
     idx, dist = forest_knn(
         x, key, n_trees=cfg.n_trees, depth=depth, k=k,
-        window=cfg.window, rp_mode=cfg.rp_mode)
+        window=cfg.window, rp_mode=cfg.rp_mode,
+        impl=getattr(cfg, "knn_impl", "auto"))
     if cfg.n_explore_iters:
         idx, dist = neighbor_explore(
             x, idx, dist, iters=cfg.n_explore_iters,
@@ -231,8 +260,36 @@ def build_knn_graph(x: jax.Array, key, cfg):
     return idx, dist
 
 
-def knn_recall(idx: jax.Array, true_idx: jax.Array) -> float:
-    """Fraction of true K nearest neighbors recovered (paper's accuracy)."""
+@functools.partial(jax.jit, static_argnames=("tile",))
+def _recall_hits(idx: jax.Array, true_idx: jax.Array, tile: int):
+    n_tiles = idx.shape[0] // tile
+    K = idx.shape[1]
+
+    def one(args):
+        a, t = args
+        return jnp.sum((a[:, :, None] == t[:, None, :]).any(-1)
+                       .astype(jnp.float32))
+
+    return jnp.sum(jax.lax.map(
+        one, (idx.reshape(n_tiles, tile, K),
+              true_idx.reshape(n_tiles, tile, K))))
+
+
+def knn_recall(idx: jax.Array, true_idx: jax.Array, *,
+               tile: int = 4096) -> float:
+    """Fraction of true K nearest neighbors recovered (paper's accuracy).
+
+    Row-tiled: the match tensor is (tile, K, K) bool per tile instead of
+    (N, K, K) — recall on an N=1M, K=50 graph peaks at ~10 MB instead of
+    the 2.5 GB that OOM'd the metrics path.  Padded rows (-1 vs -2) can
+    never match and the mean divides by the real N*K.
+    """
     N, K = idx.shape
-    matches = (idx[:, :, None] == true_idx[:, None, :]).any(-1)
-    return float(jnp.mean(matches.astype(jnp.float32)))
+    t = min(tile, N)
+    pad = (-N) % t
+    if pad:
+        idx = jnp.concatenate(
+            [idx, jnp.full((pad, K), -1, idx.dtype)])
+        true_idx = jnp.concatenate(
+            [true_idx, jnp.full((pad, K), -2, true_idx.dtype)])
+    return float(_recall_hits(idx, true_idx, t) / (N * K))

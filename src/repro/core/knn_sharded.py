@@ -6,14 +6,16 @@ graph is built with a fixed per-device memory footprint:
 
   1. **Codes** — every shard computes sign-random-projection bucket codes
      for its own slab with a shared projection matrix (one matmul).
-  2. **Candidate tiles + streaming top-k** — point slabs circulate the
-     device ring (`ppermute`); at each of the P ring steps a shard
-     computes one blocked `pairwise_sqdist` tile between its slab and the
-     in-flight remote slab (reusing `kernels/knn_topk.py` via
-     `kernels.ops`), masks pairs that share no bucket in any tree, and
-     folds the tile into a running per-row top-k.  No (N, N) distance
-     matrix and no all-gathered candidate buffer is ever materialized:
-     peak per-device buffers are (N/P, N/P) tiles.
+  2. **Fused ring pass** — point slabs circulate the device ring
+     (`ppermute`); at each of the P ring steps a shard folds the
+     in-flight remote slab straight into its running (N/P, k) best state
+     through the streaming fused distance->top-k op
+     (`kernels.ops.topk_sqdist`): bucket-mismatch/self/padding masking
+     and the top-k merge happen inside the fold, so the old per-step
+     re-merge concat is gone and distance/bucket-match work is bounded
+     by the op's (bm, bn) tiles (at most one (N/P, N/P) tile when the
+     slab fits a single tile) — and certainly no (N, N) matrix or
+     all-gathered candidate buffer.
   3. **Sharded neighbor exploring** — `neighbor_explore.
      sharded_explore_round` exchanges the (N, K) graph (output-sized),
      derives forward + reverse neighbor candidates per local row, and
@@ -35,12 +37,14 @@ import numpy as np
 from repro.core import knn as knn_lib
 from repro.core.neighbor_explore import sharded_explore_round
 from repro.kernels import ops
+from repro.kernels.ref import INVALID_DIST
 from repro.runtime.compat import shard_map
 
 
 @functools.lru_cache(maxsize=32)
 def _make_sharded_fn(mesh, axis: str, *, n_shards: int, n_real: int, k: int,
-                     n_trees: int, depth: int, iters: int, sample: int):
+                     n_trees: int, depth: int, iters: int, sample: int,
+                     impl: str = "auto"):
     """jit'd shard_map pipeline for fixed static shapes/hyper-params."""
     from jax.sharding import PartitionSpec as P
     perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
@@ -56,27 +60,28 @@ def _make_sharded_fn(mesh, axis: str, *, n_shards: int, n_real: int, k: int,
         else:                                   # exact mode: no bucketing
             codes = jnp.zeros((n_loc, 1), jnp.int32)
 
-        # ---- ring pass: blocked tiles + streaming top-k ---------------
+        # ---- ring pass: fused streaming top-k, state carried across
+        # ring steps (kernels/knn_topk.py topk_sqdist: each remote slab
+        # folds straight into the running (n_loc, k) best state — the
+        # per-step re-merge concat is gone and distance/bucket-match
+        # work is bounded by the op's (bm, bn) tiles, never a full
+        # re-merged candidate buffer; with n_loc below the tile size a
+        # single (n_loc, n_loc) tile is the whole step, same as before)
         def ring_step(_, carry):
             bi, bd, rx, rc, rid = carry
-            dd = ops.pairwise_sqdist(x_loc, rx)            # (n_loc, n_loc)
-            if n_trees:
-                match = (codes[:, None, :] == rc[None, :, :]).any(-1)
-                dd = jnp.where(match, dd, knn_lib.INF)
-            bad = (rid[None, :] == ids_loc[:, None]) | (rid[None, :] >= n_real)
-            dd = jnp.where(bad, knn_lib.INF, dd)
-            ids_all = jnp.concatenate(
-                [bi, jnp.broadcast_to(rid[None, :], dd.shape)], axis=1)
-            d_all = jnp.concatenate([bd, dd], axis=1)
-            nd, ni = jax.lax.top_k(-d_all, k)
-            bi, bd = jnp.take_along_axis(ids_all, ni, axis=1), -nd
+            rid_eff = jnp.where(rid >= n_real, -1, rid)    # padding -> mask
+            bi, bd = ops.topk_sqdist(
+                x_loc, rx, k, a_ids=ids_loc, b_ids=rid_eff,
+                codes_a=codes if n_trees else None,
+                codes_b=rc if n_trees else None,
+                init_ids=bi, init_dists=bd, impl=impl)
             rx = jax.lax.ppermute(rx, axis, perm)
             rc = jax.lax.ppermute(rc, axis, perm)
             rid = jax.lax.ppermute(rid, axis, perm)
             return bi, bd, rx, rc, rid
 
-        bi = jnp.zeros((n_loc, k), jnp.int32)
-        bd = jnp.full((n_loc, k), knn_lib.INF, jnp.float32)
+        bi = jnp.full((n_loc, k), -1, jnp.int32)
+        bd = jnp.full((n_loc, k), INVALID_DIST, jnp.float32)
         bi, bd, _, _, _ = jax.lax.fori_loop(
             0, n_shards, ring_step, (bi, bd, x_loc, codes, ids_loc))
 
@@ -121,6 +126,7 @@ def build_knn_graph_sharded(x: jax.Array, key, cfg, *, mesh=None,
     seed = jax.random.randint(ks, (1,), 0, np.int32(2**31 - 1))
     fn = _make_sharded_fn(
         mesh, axis, n_shards=n_shards, n_real=N, k=k, n_trees=cfg.n_trees,
-        depth=depth, iters=cfg.n_explore_iters, sample=cfg.explore_sample)
+        depth=depth, iters=cfg.n_explore_iters, sample=cfg.explore_sample,
+        impl=getattr(cfg, "knn_impl", "auto"))
     idx, dist = fn(xp, ids, proj, seed)
     return idx[:N], dist[:N]

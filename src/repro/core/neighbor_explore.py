@@ -7,7 +7,14 @@ Per iteration, each node's candidates are its neighbors' neighbors
 C++ reference also builds reverse edges before exploring).  The per-node
 max-heap becomes a batched dedup'd top-k.  Work is tiled over nodes to
 bound the gather footprint; ``sample`` can cap candidate columns (0 = use
-all K^2, the paper-faithful default).
+all K^2, the paper-faithful default).  Each iteration is ONE jitted
+dispatch (``_explore_round``): the reverse pass and a ``lax.map`` over
+row tiles live in the same program — the old driver paid n_tiles + 1
+host dispatches per iteration.  Unlike the tile-structured distance
+paths (brute force / windows / ring, which stream through
+``kernels.ops.topk_sqdist``), the candidate fill here gathers per-row
+id lists with heavy within-row duplication, so the merge stays on the
+argsort-dedup ``merge_candidates``.
 
 ``sharded_explore_round`` is the multi-device tile driver: it runs INSIDE
 a shard_map body (one tile of rows per shard), exchanges the KNN graph
@@ -18,9 +25,10 @@ slab of points plus one in-flight remote slab.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import knn as knn_lib
 
@@ -120,13 +128,45 @@ def sharded_explore_round(x_loc, ids_loc, knn_idx_loc, knn_dist_loc, *,
     return knn_lib.merge_candidates(ids, ds, K, self_idx=ids_loc)
 
 
+@functools.partial(jax.jit, static_argnames=("sample", "tile", "r_cap"))
+def _explore_round(x, knn_idx, knn_dist, ikey, *, sample: int, tile: int,
+                   r_cap: int):
+    """One full exploring iteration as ONE device dispatch.
+
+    ``reverse_neighbors`` is hoisted inside (it reads the same graph every
+    tile), and the row tiles run under ``jax.lax.map`` — the
+    ``brute_force_knn`` pattern — instead of the old per-tile Python loop
+    that paid ``n_tiles`` dispatches (plus one for the reverse pass) per
+    iteration.  Rows pad to a tile multiple with row 0 (same key stream
+    and padding as the old loop, so trajectories are unchanged); padded
+    rows never survive the final slice.
+    """
+    N, K = knn_idx.shape
+    n_tiles = -(-N // tile)
+    rev = reverse_neighbors(knn_idx, r_cap)
+    rows = jnp.arange(N, dtype=jnp.int32)
+    rows = jnp.concatenate(
+        [rows, jnp.zeros((n_tiles * tile - N,), jnp.int32)])
+    tkeys = jax.vmap(lambda t: jax.random.fold_in(ikey, t))(
+        jnp.arange(n_tiles))
+
+    def one(args):
+        r, tk = args
+        return _tile_explore(x, knn_idx, knn_dist, rev, r, tk, sample)
+
+    ti, td = jax.lax.map(one, (rows.reshape(n_tiles, tile), tkeys))
+    return ti.reshape(-1, K)[:N], td.reshape(-1, K)[:N]
+
+
 def neighbor_explore(x, knn_idx, knn_dist, *, iters: int = 1,
                      sample: int = 0, key=None, tile: int = 1024,
                      r_cap: int = 0):
     """Refine (knn_idx, knn_dist) for ``iters`` rounds.
 
     sample=0 explores the full candidate set (paper-faithful); tile bounds
-    the (tile, K^2, d) gather — shrink it for large K/d.
+    the (tile, K^2, d) gather — shrink it for large K/d.  Each iteration
+    is one jitted dispatch (``_explore_round``); the graph feeds back
+    between iterations.
     """
     if key is None:
         key = jax.random.key(0)
@@ -135,26 +175,8 @@ def neighbor_explore(x, knn_idx, knn_dist, *, iters: int = 1,
     # keep the per-tile gather under ~256 MB f32
     budget = 64 * (1 << 20)
     tile = max(16, min(tile, N, budget // max(1, (K * K + K) * x.shape[1])))
-    n_tiles = int(np.ceil(N / tile))
-
-    tile_fn = jax.jit(_tile_explore, static_argnums=(6,))
     for it in range(iters):
-        ikey = jax.random.fold_in(key, it)
-        rev = reverse_neighbors(knn_idx, r_cap)
-        new_idx, new_dist = [], []
-        for t in range(n_tiles):
-            lo = t * tile
-            hi = min(lo + tile, N)
-            rows = jnp.arange(lo, hi, dtype=jnp.int32)
-            pad = tile - rows.shape[0]
-            if pad:
-                rows = jnp.concatenate([rows, jnp.zeros((pad,), jnp.int32)])
-            ti, td = tile_fn(x, knn_idx, knn_dist, rev, rows,
-                             jax.random.fold_in(ikey, t), sample)
-            if pad:
-                ti, td = ti[:-pad], td[:-pad]
-            new_idx.append(ti)
-            new_dist.append(td)
-        knn_idx = jnp.concatenate(new_idx)
-        knn_dist = jnp.concatenate(new_dist)
+        knn_idx, knn_dist = _explore_round(
+            x, knn_idx, knn_dist, jax.random.fold_in(key, it),
+            sample=sample, tile=tile, r_cap=r_cap)
     return knn_idx, knn_dist

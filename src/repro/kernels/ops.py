@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.knn_topk import pairwise_sqdist as _sqdist_pallas
+from repro.kernels.knn_topk import topk_sqdist as _topk_pallas
 from repro.kernels.largevis_grad import (
     largevis_grads_chunked as _lvgrad_pallas,
 )
@@ -57,6 +58,34 @@ def pairwise_sqdist(a, b, *, impl: str = "auto", **kw):
     if _resolve(impl) == "pallas":
         return _sqdist_pallas(a, b, interpret=not _on_tpu(), **kw)
     return ref.pairwise_sqdist_ref(a, b)
+
+
+def topk_sqdist(a, b, k, *, impl: str = "auto", **kw):
+    """Streaming fused distance->top-k (ids (M, k), sqdists (M, k)).
+
+    impl:
+      "fused" | "pallas" — the Pallas kernel (``knn_topk.topk_sqdist``):
+        (bm, k) running state in VMEM, max-extraction merge, no sort.
+        Compiled on TPU, interpret mode elsewhere.
+      "ref"  — the streaming jnp oracle (``ref.topk_sqdist_ref``):
+        identical fold as a lax.map over row tiles + lax.scan over column
+        tiles with a lax.top_k merge.  Bit-identical to the kernel at
+        equal (bm, bn).
+      "auto" — the kernel on TPU, the oracle elsewhere (same contract as
+        ``pairwise_sqdist``: the interpreter's per-grid-step Python loop
+        is the slow path on CPU, and the oracle is the SAME streaming
+        computation — no (M, N) buffer either way).
+
+    Both paths accept the a_ids/b_ids/codes/init/dedup keywords; see
+    ``ref.topk_sqdist_ref``.  Each impl has its own (bm, bn) defaults
+    (VMEM-sized for the kernel, CPU-cache-sized for the oracle) — pass
+    explicit tiles when bitwise cross-impl equality matters.
+    """
+    if impl in ("fused", "pallas") or (impl == "auto" and _on_tpu()):
+        return _topk_pallas(a, b, k, interpret=not _on_tpu(), **kw)
+    if impl in ("ref", "auto"):
+        return ref.topk_sqdist_ref(a, b, k, **kw)
+    raise ValueError(f"unknown impl {impl!r}; expected fused|pallas|ref|auto")
 
 
 def largevis_grads(yi, yj, yneg, neg_mask, *, gamma=7.0, a=1.0, clip=5.0,

@@ -21,6 +21,219 @@ def pairwise_sqdist_ref(a: jax.Array, b: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# knn_topk: streaming fused distance -> top-k (flash-attention-style fold)
+# ---------------------------------------------------------------------------
+
+# Similarity value marking a masked candidate (padding, self-edge, bucket
+# mismatch, duplicate-of-state).  Strictly above the kernel's -inf "already
+# taken" marker so the selection loop and lax.top_k agree on tie order, and
+# strictly below any real similarity (|2ab - |a|^2 - |b|^2| < 3e38 for any
+# finite f32 coordinates that don't themselves overflow).
+INVALID_SIM = -3.0e38  # Python float: jnp scalars would be captured
+# The distance an invalid slot surfaces as (= -INVALID_SIM): callers seed
+# running state with this, and -INVALID_DIST round-trips to INVALID_SIM
+# exactly (IEEE negation is exact).
+INVALID_DIST = 3.0e38  # constants inside the Pallas kernel body
+
+
+def _pad_dim(x, m, axis):
+    r = (-x.shape[axis]) % m
+    if r == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, r)
+    return jnp.pad(x, pad)
+
+
+def _sim_tile(a, b, an, bn):
+    """Negated squared distance, unclamped: s = 2 a.b - |a|^2 - |b|^2.
+
+    Shared by the streaming ref and the Pallas kernel (bit-identical op
+    order: ((2ab - an) - bn)); larger similarity = closer.  The clamp to
+    non-negative distance happens once on the final (M, k) output instead
+    of per (bm, bn) tile — one fewer full pass over every candidate tile.
+    """
+    s = 2.0 * jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    return s - an[:, None] - bn[None, :]
+
+
+def _mask_bad(s, a_ids, b_ids):
+    """Invalidate padding (b_id < 0) and self-edges (b_id == a_id).
+
+    A numerical no-op when the tile holds no negative b_id and the a/b id
+    ranges are disjoint — the streaming ref exploits that by cond-ing the
+    pass away on non-overlapping tiles (most of them: the diagonal plus
+    the ragged tail), while the kernel applies it unconditionally (one
+    VPU pass next to the MXU matmul); outputs are identical either way.
+    """
+    bad = (b_ids[None, :] < 0) | (b_ids[None, :] == a_ids[:, None])
+    return jnp.where(bad, INVALID_SIM, s)
+
+
+def _mask_tile(s, a_ids, b_ids, codes_a, codes_b, state_ids, dedup: bool,
+               skip_bad: bool = False):
+    """Invalidate padding (b_id < 0), self-edges, bucket mismatches and —
+    when ``dedup`` — candidates whose id already sits in the running state.
+    Shared by the streaming ref and the Pallas kernel (the ref conds the
+    bad-mask separately and passes ``skip_bad=True``)."""
+    if not skip_bad:
+        s = _mask_bad(s, a_ids, b_ids)
+    if codes_a is not None:
+        match = (codes_a[:, None, :] == codes_b[None, :, :]).any(-1)
+        s = jnp.where(match, s, INVALID_SIM)
+    if dedup:
+        dup = (b_ids[None, :, None] == state_ids[:, None, :]).any(-1)
+        s = jnp.where(dup, INVALID_SIM, s)
+    return s
+
+
+def topk_sqdist_ref(a: jax.Array, b: jax.Array, k: int, *,
+                    a_ids: jax.Array | None = None,
+                    b_ids: jax.Array | None = None,
+                    codes_a: jax.Array | None = None,
+                    codes_b: jax.Array | None = None,
+                    init_ids: jax.Array | None = None,
+                    init_dists: jax.Array | None = None,
+                    dedup: bool = False,
+                    bm: int = 2048, bn: int | None = None, lane: int = 1,
+                    merge: str = "auto"):
+    """Streaming fused distance->top-k: the pure-jnp oracle AND the CPU
+    production path (``ops.topk_sqdist`` routes impl="auto" here off-TPU).
+
+    For each row of ``a`` (M, d), returns the ``k`` nearest rows of ``b``
+    (N, d) as (ids (M, k) int32, sqdists (M, k) f32), distances ascending.
+    The (M, N) distance matrix never materializes: column tiles of ``b``
+    are folded into a running (bm, k) best state carried through a
+    ``lax.scan``, exactly like flash-attention folds softmax tiles.  The
+    fold works in *similarity* space (s = 2ab - |a|^2 - |b|^2, i.e. the
+    negated squared distance) so ``lax.top_k`` applies directly — no
+    negate pass, no clamp pass per tile; both happen once on the final
+    (M, k) state.  Row tiles go through ``lax.map`` so the whole call is
+    one dispatch (the ``brute_force_knn`` pattern).
+
+    Masking/merging semantics (shared with the Pallas kernel, which is
+    bit-identical — tests assert bitwise equality on ids AND dists):
+
+      * ``b_ids`` (N,) gives candidate ids (default ``arange(N)``);
+        negative ids are padding and never selected over real candidates.
+      * ``a_ids`` (M,) enables self-edge masking (b_id == a_id).
+      * ``codes_a`` (M, T) / ``codes_b`` (N, T): keep only pairs sharing
+        a bucket code in at least one of T trees (the sharded pipeline's
+        forest mask, applied per tile instead of as an (M, N) buffer).
+      * ``init_ids``/``init_dists`` (M, k) seed the running state — this
+        is how the sharded ring carries its top-k across ring steps and
+        how ``forest_knn`` folds tree t+1 into the tree-t result; empty
+        slots are (id=-1, dist=INVALID_DIST).
+      * ``dedup=True`` masks candidates already present in the running
+        state (cross-tree duplicates).  Costs a (bm, bn, k) compare per
+        tile — enable only where duplicates are possible.
+
+    Invalid output slots (fewer than k valid candidates) surface as
+    (id=-1-or-masked-id, dist=INVALID_DIST-ish); they order after every
+    real neighbor.
+
+    ``lane`` pads d to a multiple (the kernel needs 128 for the MXU; the
+    CPU default of 1 skips the pad — at d=100 the zero columns would
+    inflate the matmul ~28% for nothing).  ``merge`` picks the fold
+    formulation: "concat" top_k's over [state | tile] directly; "tile"
+    top_k's the tile first and merges the (bm, 2k) shortlist — the same
+    output bit-for-bit (top-k of a union is top-k of state ∪ top-k(tile),
+    and both keep state-before-tile, earliest-position tie order) but
+    cheaper when many column tiles would each pay the (bm, k+bn) concat
+    copy; "auto" uses "tile" for a single column tile and from 8 tiles
+    up.  Bitwise equality with the kernel therefore holds at equal
+    (bm, bn, lane) for EITHER merge.
+    """
+    M, d = a.shape
+    N = b.shape[0]
+    bm = min(bm, M)
+    if bn is None:
+        # wider tiles amortize the per-tile merge once the column count
+        # is large (the tile-shortlist regime); 4096 wins in between
+        bn = 8192 if N >= 65536 else 4096
+    bn = min(bn, N)
+    a_ids = (jnp.full((M,), -1, jnp.int32) if a_ids is None
+             else a_ids.astype(jnp.int32))
+    b_ids = (jnp.arange(N, dtype=jnp.int32) if b_ids is None
+             else b_ids.astype(jnp.int32))
+    # pad: rows to a bm multiple, cols to a bn multiple, d to a lane
+    # multiple (zero features add exact 0.0 terms; at equal lane the ref
+    # and the kernel reduce over the same shapes -> the same bits)
+    ap = _pad_dim(_pad_dim(a.astype(jnp.float32), bm, 0), lane, 1)
+    bp = _pad_dim(_pad_dim(b.astype(jnp.float32), bn, 0), lane, 1)
+    aip = _pad_dim(a_ids, bm, 0)
+    bip = jnp.pad(b_ids, (0, bp.shape[0] - N), constant_values=-1)
+    if codes_a is not None:
+        codes_a = _pad_dim(codes_a.astype(jnp.int32), bm, 0)
+        codes_b = _pad_dim(codes_b.astype(jnp.int32), bn, 0)
+    if init_ids is not None:
+        init_ids = _pad_dim(init_ids.astype(jnp.int32), bm, 0)
+        init_s = jnp.maximum(-_pad_dim(init_dists.astype(jnp.float32),
+                                       bm, 0), INVALID_SIM)
+    n_m = ap.shape[0] // bm
+    n_n = bp.shape[0] // bn
+    if merge == "auto":
+        # "tile" wins when the concat copy dominates: many column tiles
+        # (each pays it) or a single tile (top_k the tile directly);
+        # "concat" wins in between, where its single top_k beats the
+        # double top_k per tile
+        merge = "concat" if 1 < n_n < 8 else "tile"
+    bT = bp.reshape(n_n, bn, -1)
+    biT = bip.reshape(n_n, bn)
+    cbT = codes_b.reshape(n_n, bn, -1) if codes_a is not None else None
+    # per-column-tile id range, hoisted: the self/padding mask pass is a
+    # numerical no-op unless the tile contains a negative id or its id
+    # range overlaps the row tile's — cond it away elsewhere (one fewer
+    # full (bm, bn) pass on most tiles; see _mask_bad)
+    b_lo = jnp.min(biT, axis=1)
+    b_hi = jnp.max(biT, axis=1)
+
+    def row_tile(args):
+        at, ait, cat, st0 = args
+        an = jnp.sum(at * at, axis=1)
+        a_lo, a_hi = jnp.min(ait), jnp.max(ait)
+
+        def fold(carry, xs):
+            si, ss = carry
+            bt, bit, cbt, blo, bhi = xs
+            bn_norm = jnp.sum(bt * bt, axis=1)
+            s = _sim_tile(at, bt, an, bn_norm)
+            need_bad = (blo < 0) | ((bhi >= a_lo) & (blo <= a_hi))
+            s = jax.lax.cond(need_bad,
+                             lambda t: _mask_bad(t, ait, bit),
+                             lambda t: t, s)
+            s = _mask_tile(s, None, bit, cat, cbt, si, dedup,
+                           skip_bad=True)
+            if merge == "tile":
+                # shortlist the tile first: the (bm, k+bn) concat copy of
+                # the full tile never happens; bitwise-identical (see
+                # docstring)
+                ts, ti = jax.lax.top_k(s, min(k, s.shape[1]))
+                s_all = jnp.concatenate([ss, ts], axis=1)
+                i_all = jnp.concatenate([si, bit[ti]], axis=1)
+            else:
+                s_all = jnp.concatenate([ss, s], axis=1)
+                i_all = jnp.concatenate(
+                    [si, jnp.broadcast_to(bit[None, :], s.shape)], axis=1)
+            ns, ni = jax.lax.top_k(s_all, k)
+            return (jnp.take_along_axis(i_all, ni, axis=1), ns), None
+
+        (si, ss), _ = jax.lax.scan(fold, st0, (bT, biT, cbT, b_lo, b_hi))
+        return si, jnp.maximum(-ss, 0.0)
+
+    caT = codes_a.reshape(n_m, bm, -1) if codes_a is not None else None
+    if init_ids is not None:
+        st0 = (init_ids.reshape(n_m, bm, k), init_s.reshape(n_m, bm, k))
+    else:
+        st0 = (jnp.full((n_m, bm, k), -1, jnp.int32),
+               jnp.full((n_m, bm, k), INVALID_SIM))
+    idx, dist = jax.lax.map(
+        row_tile, (ap.reshape(n_m, bm, -1), aip.reshape(n_m, bm), caT, st0))
+    return idx.reshape(-1, k)[:M], dist.reshape(-1, k)[:M]
+
+
+# ---------------------------------------------------------------------------
 # largevis_grad: fused attractive + repulsive forces (f(x) = 1/(1+a x^2))
 # ---------------------------------------------------------------------------
 

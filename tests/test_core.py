@@ -92,35 +92,43 @@ def test_brute_force_map_odd_tiles(blobs):
     assert "403x403" not in hlo, "full NxN distance matrix materialized"
 
 
-def test_forest_knn_streaming_merge_peak_buffer(blobs):
-    """Trees stream through a running top-k: the lowered program holds no
-    (N, n_trees*(k+1)) all-trees candidate concat — peak candidate memory
-    is (N, 2k+1) — and the output matches the batch-merge reference."""
+def test_forest_knn_scan_matches_tree_loop(blobs):
+    """The lax.scan over stacked tree codes is bitwise the per-tree Python
+    loop over the same window fold, the lowered program holds no
+    (N, n_trees*(k+1)) all-trees candidate concat, and the compiled body
+    appears ONCE regardless of n_trees (same HLO op counts for 2 vs 4
+    trees — the old loop unrolled the tree body n_trees times)."""
+    from repro.kernels import ref as ref_lib
     x, _ = blobs
     N, k, n_trees, window = x.shape[0], 15, 4, 32
     depth = knn_lib._auto_depth(N, 64)
     idx, dist = knn_lib.forest_knn(x, KEY, n_trees=n_trees, depth=depth,
                                    k=k, window=window)
-    # reference: the old all-trees concat + single merge
+    # reference: Python loop over trees, same fold (the scan is pure
+    # dispatch restructuring — trajectories must be bitwise identical)
     codes = knn_lib.hash_codes(x, KEY, n_trees, depth)
-    ids, ds = zip(*(knn_lib._window_candidates_one_tree(
-        x, codes[:, t], k, window) for t in range(n_trees)))
-    ref_idx, ref_dist = knn_lib.merge_candidates(
-        jnp.concatenate(ids, axis=1), jnp.concatenate(ds, axis=1), k,
-        self_idx=jnp.arange(N))
-    # same neighbor sets (row order may differ on exact-tie distances)
-    order_a = np.lexsort((np.asarray(idx),
-                          np.round(np.asarray(dist), 5)), axis=-1)
-    order_b = np.lexsort((np.asarray(ref_idx),
-                          np.round(np.asarray(ref_dist), 5)), axis=-1)
-    np.testing.assert_array_equal(
-        np.take_along_axis(np.asarray(idx), order_a, 1),
-        np.take_along_axis(np.asarray(ref_idx), order_b, 1))
-    hlo = knn_lib.forest_knn.lower(x, KEY, n_trees=n_trees, depth=depth,
-                                   k=k, window=window).as_text()
-    assert f"{N}x{n_trees * (k + 1)}x" not in hlo, (
+    run_i = jnp.full((N, k), -1, jnp.int32)
+    run_d = jnp.full((N, k), ref_lib.INVALID_DIST, jnp.float32)
+    for t in range(n_trees):
+        run_i, run_d = knn_lib._window_fold_one_tree(
+            x, codes[:, t], k, window, run_i, run_d, "auto")
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(run_i))
+    np.testing.assert_array_equal(np.asarray(dist), np.asarray(run_d))
+
+    def hlo(nt):
+        return knn_lib.forest_knn.lower(
+            x, KEY, n_trees=nt, depth=depth, k=k, window=window).as_text()
+
+    h4 = hlo(n_trees)
+    assert f"{N}x{n_trees * (k + 1)}x" not in h4, (
         "all-trees candidate concat materialized")
-    assert f"{N}x{2 * k + 1}x" in hlo, "expected the streaming merge width"
+    # one scan body regardless of n_trees: every op the tree body lowers
+    # to (sorts from the per-tree argsort, the fold's top-k) appears the
+    # same number of times whether the forest has 2 or 4 trees
+    h2 = hlo(2)
+    for marker in ("sort(", "top-k", "while("):
+        assert h4.count(marker) == h2.count(marker), (
+            marker, h4.count(marker), h2.count(marker))
 
 
 def test_merge_candidates_dedup_and_self():

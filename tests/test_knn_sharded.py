@@ -9,9 +9,9 @@ keeps its single-device jax config.  Covered:
   * an N-not-divisible-by-shard-count case (N=2003 over 8 shards)
   * exact mode (n_trees=0): the ring pass is distributed brute force —
     recall 1.0 and oracle-identical distances
-  * peak-buffer shape check: every `pairwise_sqdist` tile traced by the
-    sharded pipeline is at most (ceil(N/P), ceil(N/P)) — no (N, N)
-    distance matrix — and the lowered per-device HLO contains no
+  * peak-buffer shape check: every fused `topk_sqdist` fold traced by
+    the sharded pipeline operates on at most (ceil(N/P), d) slabs — no
+    (N, N) distance matrix — and the lowered per-device HLO contains no
     N x N or N x (K^2+K) f32 buffer (no all-gathered candidates)
 """
 import os
@@ -43,13 +43,13 @@ from repro.launch.mesh import make_data_mesh
 assert len(jax.devices()) == 8, jax.devices()
 KEY = jax.random.key(0)
 
-# ---- record every pairwise_sqdist tile shape the pipeline traces ---------
+# ---- record every fused topk_sqdist operand shape the pipeline traces ----
 TILE_SHAPES = []
-_real_sqdist = ops.pairwise_sqdist
-def _recording_sqdist(a, b, **kw):
+_real_topk = ops.topk_sqdist
+def _recording_topk(a, b, k, **kw):
     TILE_SHAPES.append((tuple(a.shape), tuple(b.shape)))
-    return _real_sqdist(a, b, **kw)
-ops.pairwise_sqdist = _recording_sqdist
+    return _real_topk(a, b, k, **kw)
+ops.topk_sqdist = _recording_topk
 
 # ---- 1) 8-way shard vs oracle and vs single-device -----------------------
 N, P = 2000, 8
@@ -62,8 +62,9 @@ idx_s, dist_s = build_knn_graph_sharded(x, KEY, cfg)
 r_sharded = knn_lib.knn_recall(idx_s, true_idx)
 assert r_sharded >= 0.95, f"sharded recall vs oracle too low: {r_sharded}"
 
-# no tile as large as the full point set: every pairwise block is bounded
-# by the per-shard slab (streaming top-k, not an (N, N) matrix)
+# no operand as large as the full point set: every fused fold is bounded
+# by the per-shard slab (ring-carried streaming top-k, not an (N, N)
+# matrix)
 n_loc = math.ceil(N / P)
 assert TILE_SHAPES, "sharded pipeline did not route through kernels.ops"
 for sa, sb in TILE_SHAPES:

@@ -1,0 +1,285 @@
+"""Streaming fused distance->top-k: kernel vs oracle, HLO, consumers.
+
+The contract (kernels/knn_topk.py::topk_sqdist vs ref.topk_sqdist_ref):
+bitwise-identical (ids, dists) at equal (bm, bn) tiles — the kernel's
+max-extraction merge reproduces lax.top_k's earliest-index tie order
+exactly — plus structural HLO assertions that the fused consumers
+(`brute_force_knn`, `forest_knn` window candidates, the sharded ring
+step) materialize no (M, N) distance buffer and no post-kernel
+sort/top_k, and that `forest_knn` compiles one scan body regardless of
+n_trees.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.largevis_default import LargeVisConfig
+from repro.core import knn as knn_lib
+from repro.data.synthetic import gaussian_mixture
+from repro.kernels import ops, ref
+from repro.kernels.knn_topk import topk_sqdist
+
+KEY = jax.random.key(3)
+
+
+def _pair(m, n, d, seed=0):
+    ka, kb = jax.random.split(jax.random.fold_in(KEY, seed))
+    return (jax.random.normal(ka, (m, d), jnp.float32),
+            jax.random.normal(kb, (n, d), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# kernel == oracle, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lane", [128, 1])
+@pytest.mark.parametrize("merge", ["concat", "tile"])
+@pytest.mark.parametrize("m,n,d,k,bm,bn", [
+    (64, 64, 32, 5, 32, 32),        # even multi-tile
+    (100, 80, 7, 5, 32, 16),        # odd M, N, d
+    (33, 17, 3, 20, 16, 8),         # k > bn AND k > N (invalid tail)
+    (256, 512, 100, 20, 64, 128),   # larger sweep
+    (130, 1, 5, 1, 64, 8),          # single column
+])
+def test_kernel_matches_oracle_bitwise(m, n, d, k, bm, bn, merge, lane):
+    """Kernel == oracle bitwise at equal (bm, bn, lane), for BOTH oracle
+    merge formulations (concat vs tile-shortlist — themselves required
+    to be bit-identical to each other)."""
+    a, b = _pair(m, n, d, seed=m + n)
+    ri, rd = ref.topk_sqdist_ref(a, b, k, bm=bm, bn=bn, lane=lane,
+                                 merge=merge)
+    ki, kd = topk_sqdist(a, b, k, bm=bm, bn=bn, lane=lane, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(ki))
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(kd))
+    # and the answer is actually the k nearest
+    dn = ((np.asarray(a, np.float64)[:, None]
+           - np.asarray(b, np.float64)[None]) ** 2).sum(-1)
+    kk = min(k, n)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(rd, np.float64), 1)[:, :kk],
+        np.sort(dn, 1)[:, :kk], atol=1e-3, rtol=1e-4)
+
+
+def test_kernel_matches_oracle_self_edges_and_state():
+    """Self-exclusion, running-state seeding and dedup agree bitwise; a
+    second fold of the same candidates with dedup is a no-op."""
+    x, _ = gaussian_mixture(KEY, 200, 16, 4)
+    ids = jnp.arange(200, dtype=jnp.int32)
+    kw = dict(a_ids=ids, b_ids=ids, bm=64, bn=64, lane=1)
+    ri, rd = ref.topk_sqdist_ref(x, x, 8, **kw)
+    ki, kd = topk_sqdist(x, x, 8, interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(ki))
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(kd))
+    assert (np.asarray(ri) != np.arange(200)[:, None]).all(), "self edges"
+    r2 = ref.topk_sqdist_ref(x, x, 8, init_ids=ri, init_dists=rd,
+                             dedup=True, **kw)
+    k2 = topk_sqdist(x, x, 8, init_ids=ki, init_dists=kd, dedup=True,
+                     interpret=True, **kw)
+    for got, want in zip(k2, r2):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # dedup re-fold of the same candidates must be a no-op
+    np.testing.assert_array_equal(np.asarray(r2[0]), np.asarray(ri))
+
+
+def test_kernel_matches_oracle_duplicate_ids():
+    """Duplicate ids across column tiles (same id, different rows of b)
+    with dedup: the first-seen copy wins in BOTH impls, bitwise."""
+    a, b = _pair(48, 64, 8, seed=7)
+    b_ids = (jnp.arange(64) % 29).astype(jnp.int32)   # dups across tiles
+    kw = dict(b_ids=b_ids, dedup=True, bm=16, bn=16, lane=1)
+    ri, rd = ref.topk_sqdist_ref(a, b, 6, **kw)
+    ki, kd = topk_sqdist(a, b, 6, interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(ki))
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(kd))
+    for row in np.asarray(ri):
+        real = row[row >= 0]
+        assert len(set(real.tolist())) == len(real), "dup id survived"
+
+
+def test_kernel_matches_oracle_codes():
+    """Bucket-code masking (the sharded ring's forest mask) agrees."""
+    x, _ = gaussian_mixture(KEY, 160, 12, 4)
+    ids = jnp.arange(160, dtype=jnp.int32)
+    codes = (jax.random.uniform(KEY, (160, 3)) * 4).astype(jnp.int32)
+    kw = dict(a_ids=ids, b_ids=ids, codes_a=codes, codes_b=codes,
+              bm=32, bn=64, lane=1)
+    ri, rd = ref.topk_sqdist_ref(x, x, 8, **kw)
+    ki, kd = topk_sqdist(x, x, 8, interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(ki))
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(kd))
+    # every surviving neighbor shares a bucket in at least one tree
+    cn = np.asarray(codes)
+    for i, row in enumerate(np.asarray(ri)):
+        for g in row[row >= 0]:
+            assert (cn[i] == cn[g]).any(), (i, g)
+
+
+def test_oracle_results_sorted_and_exact():
+    """Streaming fold == materialize-then-top_k on the same inputs
+    (identical neighbor sets; ascending distances)."""
+    x, _ = gaussian_mixture(KEY, 500, 24, 4)
+    ids = jnp.arange(500, dtype=jnp.int32)
+    ri, rd = ref.topk_sqdist_ref(x, x, 10, a_ids=ids, b_ids=ids,
+                                 bm=128, bn=128)
+    rd_n = np.asarray(rd)
+    assert (np.diff(rd_n, axis=1) >= 0).all(), "distances not ascending"
+    dd = np.asarray(ref.pairwise_sqdist_ref(x, x), np.float64)
+    np.fill_diagonal(dd, np.inf)
+    want = np.sort(dd, 1)[:, :10]
+    np.testing.assert_allclose(np.sort(rd_n, 1), want, atol=1e-3)
+    want_ids = np.argsort(dd, 1, kind="stable")[:, :10]
+    assert (np.sort(np.asarray(ri), 1) == np.sort(want_ids, 1)).mean() > 0.999
+
+
+# ---------------------------------------------------------------------------
+# HLO: fused consumers hold no (M, N) buffer, no post-kernel sort/top_k
+# ---------------------------------------------------------------------------
+
+def test_hlo_brute_force_no_distance_matrix():
+    x = jnp.zeros((8192, 32), jnp.float32)
+    # fused path: no (M, N) buffer, no (tile, N) buffer, no sort, no top_k
+    hlo = knn_lib.brute_force_knn.lower(x, 10, tile=512,
+                                        impl="fused").as_text()
+    assert "8192x8192" not in hlo, "full NxN distance matrix"
+    assert "512x8192" not in hlo, "materialized (tile, N) row-tile buffer"
+    assert "sort" not in hlo and "top_k" not in hlo, (
+        "post-kernel sort/top_k on the fused path")
+    # the streaming oracle path holds no (M, N)/(tile, N) buffer either
+    hlo_ref = knn_lib.brute_force_knn.lower(x, 10, tile=2048,
+                                            impl="ref").as_text()
+    assert "8192x8192" not in hlo_ref
+    assert "2048x8192" not in hlo_ref, "(tile, N) buffer on the ref path"
+
+
+def test_hlo_forest_window_fused_no_sort_topk():
+    x = jnp.zeros((2048, 16), jnp.float32)
+    hlo = knn_lib.forest_knn.lower(x, KEY, n_trees=4, depth=5, k=10,
+                                   window=32, impl="fused").as_text()
+    assert "top_k" not in hlo, "post-kernel top_k on the fused window path"
+    # the only sorts are the per-tree argsort of bucket codes (one scan
+    # body) — the merge itself is sort-free
+    assert hlo.count("sort") == knn_lib.forest_knn.lower(
+        x, KEY, n_trees=8, depth=5, k=10, window=32,
+        impl="fused").as_text().count("sort"), (
+        "sort count grows with n_trees — tree body unrolled or the "
+        "fused merge sorts")
+
+
+def test_hlo_sharded_ring_fused_no_buffers():
+    from repro.core import knn_sharded
+    from repro.launch.mesh import make_data_mesh
+    N, k = 1024, 10
+    fn = knn_sharded._make_sharded_fn(
+        make_data_mesh(1), "data", n_shards=1, n_real=N, k=k, n_trees=4,
+        depth=5, iters=0, sample=0, impl="fused")
+    hlo = fn.lower(jnp.zeros((N, 16), jnp.float32),
+                   jnp.arange(N, dtype=jnp.int32),
+                   jnp.zeros((16, 20), jnp.float32),
+                   jnp.zeros((1,), jnp.int32)).as_text()
+    assert "sort" not in hlo and "top_k" not in hlo, (
+        "post-kernel sort/top_k in the fused ring step")
+    assert f"{N}x{N}" not in hlo, "(n_loc, n_loc) distance buffer"
+
+
+# ---------------------------------------------------------------------------
+# forest scan vs the PR-3 per-tree loop (materialize + merge_candidates)
+# ---------------------------------------------------------------------------
+
+def _pr3_window_candidates(x, code, k, window):
+    """The PR-3 formulation: materialized (W, 3W) pairwise tiles + top_k
+    + argsort-based merge_candidates (kept here as the semantic
+    reference for the fused fold)."""
+    N, d = x.shape
+    W = window
+    order = jnp.argsort(code)
+    Np = int(np.ceil(N / W)) * W
+    pad = Np - N
+    order_p = jnp.concatenate(
+        [order, jnp.full((pad,), N, jnp.int32)]) if pad else order
+    xs = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)])[order_p]
+    nb = Np // W
+    blocks = xs.reshape(nb, W, d)
+    ids = order_p.reshape(nb, W)
+
+    def block_dists(j):
+        a = blocks[j]
+        lo = jnp.clip(j - 1, 0, nb - 1)
+        hi = jnp.clip(j + 1, 0, nb - 1)
+        b = jnp.concatenate([blocks[lo], blocks[j], blocks[hi]])
+        bid = jnp.concatenate([ids[lo], ids[j], ids[hi]])
+        dd = ops.pairwise_sqdist(a, b)
+        dd = jnp.where(bid[None, :] == N, knn_lib.INF, dd)
+        kk = min(k + 1, 3 * W)
+        nd, ni = jax.lax.top_k(-dd, kk)
+        return bid[ni], -nd
+
+    cid, cd = jax.lax.map(block_dists, jnp.arange(nb))
+    kk = cid.shape[-1]
+    flat_ids = cid.reshape(Np, kk)[:N]
+    flat_d = cd.reshape(Np, kk)[:N]
+    inv = jnp.zeros((N,), jnp.int32).at[order].set(
+        jnp.arange(N, dtype=jnp.int32))
+    return flat_ids[inv], flat_d[inv]
+
+
+def test_forest_fused_matches_pr3_loop():
+    """The fused per-tree fold selects the same neighbor sets as the old
+    materialize-then-merge loop (distances agree to f32 tolerance; the
+    two formulations differ only in summation order, so a vanishing
+    fraction of exact-boundary ties may swap)."""
+    x, _ = gaussian_mixture(KEY, 1000, 32, 8)
+    N, k, n_trees, window = 1000, 10, 3, 32
+    depth = knn_lib._auto_depth(N, 64)
+    got_i, got_d = knn_lib.forest_knn(x, KEY, n_trees=n_trees, depth=depth,
+                                      k=k, window=window)
+    codes = knn_lib.hash_codes(x, KEY, n_trees, depth)
+    run = None
+    self_idx = jnp.arange(N)
+    for t in range(n_trees):
+        cid, cd = _pr3_window_candidates(x, codes[:, t], k, window)
+        if run is not None:
+            cid = jnp.concatenate([run[0], cid], axis=1)
+            cd = jnp.concatenate([run[1], cd], axis=1)
+        run = knn_lib.merge_candidates(cid, cd, k, self_idx=self_idx)
+    want_i, want_d = run
+    same = (np.sort(np.asarray(got_i), 1)
+            == np.sort(np.asarray(want_i), 1)).all(1)
+    assert same.mean() >= 0.995, f"neighbor sets diverge: {same.mean()}"
+    np.testing.assert_allclose(
+        np.sort(np.asarray(got_d), 1)[same],
+        np.sort(np.asarray(want_d), 1)[same], atol=1e-3, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end engine path
+# ---------------------------------------------------------------------------
+
+def test_engine_path_recall():
+    """build_knn_graph through the fused stage-1 pipeline reaches >= 0.95
+    recall vs the (itself fused) brute-force oracle."""
+    x, _ = gaussian_mixture(KEY, 2000, 32, 8)
+    true_idx, _ = knn_lib.brute_force_knn(x, 15)
+    cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=3,
+                         window=32)
+    idx, dist = knn_lib.build_knn_graph(x, KEY, cfg)
+    r = knn_lib.knn_recall(idx, true_idx)
+    assert r >= 0.95, r
+    assert (np.asarray(idx) != np.arange(2000)[:, None]).all()
+    assert (np.diff(np.asarray(dist), axis=1) >= 0).all()
+
+
+def test_knn_recall_tiled_matches_untiled():
+    """The tiled recall equals the one-shot (N, K, K) formulation and
+    never materializes the full match tensor."""
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, 999, (999, 7)), jnp.int32)
+    true = jnp.asarray(rng.integers(0, 999, (999, 7)), jnp.int32)
+    got = knn_lib.knn_recall(idx, true, tile=128)       # odd: 999 % 128 != 0
+    want = float(jnp.mean(
+        (idx[:, :, None] == true[:, None, :]).any(-1).astype(jnp.float32)))
+    assert abs(got - want) < 1e-6
+    hlo = knn_lib._recall_hits.lower(
+        jnp.zeros((1024, 7), jnp.int32), jnp.zeros((1024, 7), jnp.int32),
+        128).as_text()
+    assert "1024x7x7" not in hlo, "full (N, K, K) match tensor"
