@@ -1,9 +1,55 @@
-"""Paper Fig 6: time + quality vs data size.
+"""Paper Fig 6: time + quality vs data size, to the paper's N=1M.
 
-Claim C5: LargeVis layout cost is O(N) — edge-samples/sec stays flat as N
-grows (T ∝ N total) — while t-SNE's per-iteration cost grows superlinearly
-(O(N log N) Barnes-Hut; O(N^2) exact as here)."""
+Claim C5: the whole LargeVis procedure is O(N) — normalized layout cost
+(``us_per_edge_sample``, the CI-gated lower-is-better metric; its
+reciprocal ``samples_per_sec`` must stay flat within 2x) does not grow
+with N, and the graph-preparation stages (calibration, symmetrization,
+sampler build — all sharded over the data mesh since PR 6) scale
+linearly.  t-SNE's exact per-iteration cost (O(N^2), the paper's Fig 6
+contrast) is reported at small N only.
+
+Stage 1 runs the paper's *linear* RP-forest + neighbor-exploring KNN
+(``knn_distributed=False``): the sharded ring pass keeps a fixed
+per-device memory footprint but its masked distance fold is O(N^2 d/P)
+*compute*, which is the wrong algorithm for an O(N) sweep unless the
+device count scales with N (fig2 ``--devices`` benchmarks the ring on
+a real mesh).  Everything downstream of the KNN graph — calibration,
+symmetrization, per-shard samplers, local-SGD layout — runs the
+distributed drivers.
+
+Every N runs the SAME total edge-sample budget (T = spn * N held
+constant), so edge-samples/sec across rows compares equal work per
+sample at different N — the paper's definition of "linear in N".
+
+``--devices P`` exposes P host CPU devices (parsed before any
+backend-touching import) and drives the identical sharded pipeline on
+a real P-way mesh; the default runs it on one device, where the
+sharded stages are bitwise the single-device path.
+
+``--tiny`` is the CI bench-smoke mode: a reduced N sweep with its own
+table name (``fig6_scaling_tiny``) since tiny timings are not
+comparable to the full sweep — the gate contract is documented in
+benchmarks/README.md.
+"""
 from __future__ import annotations
+
+import argparse
+import os
+
+_ARGS = None
+if __name__ == "__main__":
+    _ap = argparse.ArgumentParser(description=__doc__)
+    _ap.add_argument("--devices", type=int, default=0,
+                     help="expose this many host CPU devices for the "
+                          "data mesh (e.g. 4)")
+    _ap.add_argument("--tiny", action="store_true",
+                     help="CI bench-smoke mode: small N sweep, separate "
+                          "fig6_scaling_tiny table")
+    _ARGS = _ap.parse_args()
+    if _ARGS.devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_ARGS.devices}")
 
 import jax
 
@@ -15,26 +61,70 @@ from repro.core.metrics import knn_classifier_accuracy
 
 KEY = jax.random.key(5)
 
+# one total edge-sample budget for the whole sweep: spn = TOTAL // n
+TOTAL_SAMPLES = 4_000_000
+TINY_TOTAL = 400_000
 
-def run(rows: Rows):
-    for n in (1000, 2000, 4000, 8000):
+
+def _cfg(n: int, total: int) -> LargeVisConfig:
+    return LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=1,
+                          window=32, perplexity=12.0,
+                          samples_per_node=max(1, total // n),
+                          batch_size=4096, sync_every=8, distributed=True,
+                          knn_distributed=False)
+
+
+def run(rows: Rows, *, ns=(10_000, 100_000, 1_000_000),
+        total=TOTAL_SAMPLES, accuracy_max_n=10_000, tsne_ns=(2000, 4000)):
+    for n in ns:
         x, labels = dataset("blobs100", n, KEY)
-        cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=1,
-                             window=32, perplexity=12.0,
-                             samples_per_node=2000, batch_size=4096)
+        cfg = _cfg(n, total)
+        idx, dist, w, t_graph = build_graph(x, KEY, cfg)
+        jax.block_until_ready(w)
+        # warmup=1 (timed default): the measured call excludes compile.
+        # The gated metric derives from the stage-split layout_s, not the
+        # whole-call secs — the one-time O(E) alias build (sampler_s,
+        # recorded alongside) would otherwise smear into the per-sample
+        # number exactly where it matters (large N, fixed total budget)
+        (res, t_stage), secs = timed(layout_graph, idx, w, KEY, cfg)
+        layout_s = t_stage["layout_s"]
+        derived = dict(
+            samples_per_sec=round(res.edge_samples / max(layout_s, 1e-9)),
+            us_per_edge_sample=round(layout_s * 1e6 / res.edge_samples, 5),
+            edge_samples=res.edge_samples,
+            knn_s=round(t_graph["knn_s"], 3),
+            weights_s=round(t_graph["weights_s"], 3),
+            sampler_s=round(t_stage["sampler_s"], 3),
+            layout_s=round(layout_s, 3),
+        )
+        if n <= accuracy_max_n:
+            derived["accuracy"] = round(
+                knn_classifier_accuracy(res.y, labels, k=5), 4)
+        rows.add(f"largevis_n{n}", secs, **derived)
+    for n in tsne_ns:
+        x, _ = dataset("blobs100", n, KEY)
+        cfg = _cfg(n, total)
         idx, dist, w, _ = build_graph(x, KEY, cfg)
-        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg)
-        acc = knn_classifier_accuracy(res.y, labels, k=5)
-        rows.add(f"largevis_n{n}", secs, accuracy=round(acc, 4),
-                 samples_per_sec=round(res.edge_samples / max(secs, 1e-9)))
-        if n <= 4000:      # exact t-SNE O(N^2) budget
-            (y, _), secs_t = timed(tsne_layout, idx, w, n_iter=100, key=KEY)
-            rows.add(f"tsne_n{n}", secs_t,
-                     sec_per_iter=round(secs_t / 100, 5))
+        (y, _), secs_t = timed(tsne_layout, idx, w, n_iter=100, key=KEY)
+        rows.add(f"tsne_n{n}", secs_t, sec_per_iter=round(secs_t / 100, 5))
+
+
+def run_tiny(rows: Rows):
+    """CI bench-smoke: same pipeline and equal-budget structure at small
+    N.  Must be given a ``Rows("fig6_scaling_tiny")`` — tiny timings are
+    not comparable to the full sweep, and row names are matched across
+    runs (the gate compares ``us_per_edge_sample`` on ``largevis_n*``
+    rows at 2x against the committed tiny baseline)."""
+    run(rows, ns=(2000, 8000), total=TINY_TOTAL, accuracy_max_n=2000,
+        tsne_ns=())
 
 
 if __name__ == "__main__":
-    rows = Rows("fig6_scaling")
-    run(rows)
+    if _ARGS.tiny:
+        rows = Rows("fig6_scaling_tiny")
+        run_tiny(rows)
+    else:
+        rows = Rows("fig6_scaling")
+        run(rows)
     rows.print_csv()
     rows.save()

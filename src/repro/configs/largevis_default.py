@@ -29,9 +29,18 @@ class LargeVisConfig:
     #   / oracle elsewhere (bit-identical at equal tiles)
     perplexity: float = 50.0        # u in Eqn (1)
     perplexity_iters: int = 64      # bisection steps for sigma_i
-    # --- distributed graph construction (core/knn_sharded.py) ---
-    distributed: bool = False       # shard stage 1 over the "data" mesh axis
+    # --- distributed pipeline (knn_sharded.py / perplexity.py /
+    #     sampler.py sharded drivers + local-SGD layout) ---
+    distributed: bool = False       # run every stage on the 1-D "data" mesh
     data_shards: int = 0            # devices in the 1-D mesh (0 = all)
+    knn_distributed: bool = True    # stage-1 routing under distributed=True:
+    #   True = the ring pass (core/knn_sharded.py) — fixed per-device
+    #   memory, but its masked distance fold costs O(N^2 d / P) FLOPs
+    #   per device (the bucket codes mask candidates, they don't skip
+    #   tiles), which wants a device count that scales with N;
+    #   False = the paper's linear RP-forest + neighbor-exploring KNN
+    #   (single-device compute, O(N) — the fig6 scaling configuration),
+    #   with calibration/symmetrization/samplers/layout still sharded
     # --- layout (paper §3.2) ---
     out_dim: int = 2                # s
     n_negatives: int = 5            # M

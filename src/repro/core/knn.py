@@ -239,10 +239,14 @@ def build_knn_graph(x: jax.Array, key, cfg):
     """Full paper pipeline: forest init + neighbor exploring iterations.
 
     Returns (idx (N,K) int32, sqdist (N,K) f32).  With
-    ``cfg.distributed`` set, routes to the sharded multi-device pipeline
-    (`core/knn_sharded.py`).
+    ``cfg.distributed`` set, routes to the sharded multi-device ring
+    pipeline (`core/knn_sharded.py`) — unless ``cfg.knn_distributed``
+    is False, which keeps the paper's linear forest+explore path for
+    stage 1 (the ring's masked distance fold is O(N^2 d / P) compute;
+    see the config docstring) while the downstream stages stay sharded.
     """
-    if getattr(cfg, "distributed", False):
+    if (getattr(cfg, "distributed", False)
+            and getattr(cfg, "knn_distributed", True)):
         from repro.core.knn_sharded import build_knn_graph_sharded
         return build_knn_graph_sharded(x, key, cfg)
     from repro.core.neighbor_explore import neighbor_explore

@@ -38,6 +38,7 @@ from repro.core import knn as knn_lib
 from repro.core.neighbor_explore import sharded_explore_round
 from repro.kernels import ops
 from repro.kernels.ref import INVALID_DIST
+from repro.runtime import sharding as sh
 from repro.runtime.compat import shard_map
 
 
@@ -117,9 +118,11 @@ def build_knn_graph_sharded(x: jax.Array, key, cfg, *, mesh=None,
     N, d = x.shape
     k = min(cfg.n_neighbors, N - 1)
     depth = cfg.tree_depth or knn_lib._auto_depth(N, cfg.leaf_target)
-    n_pad = int(np.ceil(N / n_shards)) * n_shards
-    xp = jnp.pad(x.astype(jnp.float32), ((0, n_pad - N), (0, 0)))
-    ids = jnp.arange(n_pad, dtype=jnp.int32)
+    # shared contiguous-block row layout (runtime/sharding.py): every
+    # sharded stage downstream pads rows the same way, so graph tensors
+    # line up shard-for-shard without repartitioning between stages
+    xp = sh.pad_rows(x.astype(jnp.float32), n_shards)
+    ids = jnp.arange(xp.shape[0], dtype=jnp.int32)
     kp, ks = jax.random.split(key)
     proj = jax.random.normal(kp, (d, max(cfg.n_trees, 1) * depth),
                              jnp.float32)

@@ -51,13 +51,35 @@ class LargeVisResult:
     edge_samples: int
 
 
+def _data_mesh(cfg: LargeVisConfig):
+    """The 1-D "data" mesh every distributed stage shares."""
+    from repro.launch.mesh import make_data_mesh
+    return make_data_mesh(cfg.data_shards)
+
+
 def build_graph(x, key, cfg: LargeVisConfig = DEFAULT):
-    """Stage 1: KNN graph + calibrated weights."""
+    """Stage 1: KNN graph + calibrated weights.
+
+    With ``cfg.distributed`` every sub-stage runs on the same 1-D
+    "data" mesh: the ring-streamed KNN build, then row-parallel
+    perplexity calibration and all-gather symmetrization
+    (`core/perplexity.py` sharded drivers) — the graph never leaves the
+    mesh between KNN and weights, and the sharded weights are
+    bitwise-equal to the single-device path."""
     t0 = time.time()
     idx, dist = knn_lib.build_knn_graph(x, key, cfg)
+    # block (no transfer) so knn_s/weights_s split the stages honestly —
+    # async dispatch would otherwise smear KNN compute into weights_s
+    jax.block_until_ready((idx, dist))
     t1 = time.time()
-    w = perp_lib.edge_weights(idx, dist, cfg.perplexity,
-                              iters=cfg.perplexity_iters)
+    if cfg.distributed:
+        w = perp_lib.edge_weights_sharded(idx, dist, cfg.perplexity,
+                                          iters=cfg.perplexity_iters,
+                                          mesh=_data_mesh(cfg))
+    else:
+        w = perp_lib.edge_weights(idx, dist, cfg.perplexity,
+                                  iters=cfg.perplexity_iters)
+    jax.block_until_ready(w)
     t2 = time.time()
     return idx, dist, w, {"knn_s": t1 - t0, "weights_s": t2 - t1}
 
@@ -72,17 +94,34 @@ def layout_graph(knn_idx, weights, key, cfg: LargeVisConfig = DEFAULT,
     graph — stage-1 outputs never round-trip through the host; ``"host"``
     is the numpy Vose oracle.  The ``sampler_s`` timing isolates table
     construction from the layout itself (tables are blocked on, so async
-    dispatch cannot smear build time into ``layout_s``)."""
+    dispatch cannot smear build time into ``layout_s``).
+
+    With ``cfg.distributed`` the alias tables are built *per shard* on
+    the data mesh (`sampler.build_samplers_sharded`: each shard owns the
+    alias table over its own edges plus a tiny replicated
+    shard-selection table) and the layout runs through the local-SGD
+    driver with the edge tables left sharded — samplers stay
+    device-resident pytrees end to end, exactly like the single-device
+    boundary."""
     t0 = time.time()
-    edge_s = sampler_lib.build_edge_sampler(knn_idx, weights,
-                                            impl=cfg.sampler_impl)
-    neg_s = sampler_lib.build_negative_sampler(knn_idx, weights,
-                                               power=cfg.neg_power,
-                                               impl=cfg.sampler_impl)
+    if cfg.distributed:
+        edge_s, neg_s = sampler_lib.build_samplers_sharded(
+            knn_idx, weights, power=cfg.neg_power, mesh=_data_mesh(cfg))
+    else:
+        edge_s = sampler_lib.build_edge_sampler(knn_idx, weights,
+                                                impl=cfg.sampler_impl)
+        neg_s = sampler_lib.build_negative_sampler(knn_idx, weights,
+                                                   power=cfg.neg_power,
+                                                   impl=cfg.sampler_impl)
     jax.block_until_ready((edge_s.threshold, neg_s.threshold))
     t1 = time.time()
-    res = layout_lib.run_layout(key, edge_s, neg_s, knn_idx.shape[0], cfg,
-                                callback=callback)
+    if cfg.distributed:
+        res = layout_lib.run_layout_local_sgd(key, edge_s, neg_s,
+                                              knn_idx.shape[0], cfg,
+                                              _data_mesh(cfg))
+    else:
+        res = layout_lib.run_layout(key, edge_s, neg_s, knn_idx.shape[0],
+                                    cfg, callback=callback)
     t2 = time.time()
     return res, {"sampler_s": t1 - t0, "layout_s": t2 - t1}
 

@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.core import layout_engine
 from repro.core.layout_engine import sgd_edge_step
-from repro.core.sampler import EdgeSampler, NodeSampler
+from repro.core.sampler import (EdgeSampler, NodeSampler,
+                                ShardedEdgeSampler, ShardedNodeSampler)
 from repro.runtime.compat import shard_map
 
 
@@ -84,62 +85,102 @@ def _step_kwargs(edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
 # ---------------------------------------------------------------------------
 
 def make_local_sgd_fns(mesh, cfg, n_nodes: int, *, batch: int):
-    """Returns (local_steps_fn, sync_fn) over replicated-per-device layouts.
+    """Returns the jitted H-local-steps-then-sync round function.
 
     Each device holds its own full replica of Y (leading replica axis,
     sharded over "data"), samples its own edge stream (RNG folded with the
     device index), and applies ``sync_every`` (H) local updates between
-    psum-averages — the paper's "conflicting updates are rare on sparse
-    graphs" argument, made explicit: replicas drift for H steps and the
-    drift is averaged away.  H=1 degenerates to synchronous data-parallel.
+    syncs.  The sync is a **psum of deltas** (``y0 + psum(y - y0)``), not
+    a mean: the paper's async SGD applies every sampled edge's update at
+    full ``lr`` (stale reads tolerated — "conflicting updates are rare on
+    sparse graphs"), and summing the replica drifts is exactly that; a
+    pmean would scale every per-sample step by 1/P, silently under-
+    stepping the schedule P-fold (measured: 2000-node fixture at P=8
+    drops from ~0.95 to ~0.75 KNN-classifier accuracy).  The flip side is
+    that the collision argument now bounds the *global* concurrent batch
+    ``batch * P`` — the driver caps it at ~N/2.  H=1 degenerates to
+    synchronous data-parallel; at P=1 psum == pmean == identity, so
+    single-device trajectories are unchanged bitwise.
 
     The H local steps are one ``layout_engine.scan_layout_steps`` scan per
     shard_map body (formerly a hand-rolled ``fori_loop`` over the jitted
     per-step fn — same dynamics, one compiled loop instead of H inlined
     step bodies).
+
+    Samplers may be the flat :class:`EdgeSampler`/:class:`NodeSampler`
+    (tables replicated, every device draws global indices) or the
+    sharded pair from ``sampler.build_samplers_sharded``: the stacked
+    per-shard edge tables enter sharded over "data" (each device holds
+    ONLY its own shard's table — the reference implementation's
+    per-thread sampling range, i.e. stratified edge sampling), while the
+    negative tables stay replicated (O(N) total) so collisions against
+    any node mask correctly.  At one device the two modes produce the
+    identical trajectory bitwise (same tables, same key stream).
     """
     from jax.sharding import PartitionSpec as P
     dp_spec = P("data", None, None)
     rep = P()
     H = max(1, cfg.sync_every)
 
+    def _edge_in_spec(edge_sampler):
+        """Spec pytree for the edge sampler argument: sharded stacked
+        tables get their leading (P,) axis over "data" with the tiny
+        shard-selection table replicated; flat samplers replicate."""
+        if isinstance(edge_sampler, ShardedEdgeSampler):
+            if edge_sampler.n_shards != mesh.shape["data"]:
+                raise ValueError(
+                    f"sampler built for {edge_sampler.n_shards} shards, "
+                    f"mesh has {mesh.shape['data']}")
+            t = P("data", None)
+            return ShardedEdgeSampler(t, t, t, t, rep, rep,
+                                      edge_sampler.n_shards,
+                                      edge_sampler.n_edges)
+        return rep
+
     def local_steps(y_rep, seed, t_frac0, dt_frac, edge_sampler,
                     neg_sampler):
         """H local steps on each replica (shard_map over 'data').
 
-        The sampler pytrees enter replicated — a single ``P()`` spec per
-        sampler covers every leaf (jax prefix-pytree semantics)."""
+        Flat sampler pytrees enter replicated — a single ``P()`` spec
+        per sampler covers every leaf (jax prefix-pytree semantics);
+        sharded edge samplers enter with their stacked tables split over
+        the mesh (see ``_edge_in_spec``)."""
 
         def body(y_loc, seed, t_frac0, dt_frac, edge_sampler, neg_sampler):
             dev = jax.lax.axis_index("data")
+            # a sharded edge sampler arrives as this device's (1, E_loc)
+            # block: sample the local shard's edges (stratified)
+            es = (edge_sampler.local()
+                  if isinstance(edge_sampler, ShardedEdgeSampler)
+                  else edge_sampler)
             base_key = jax.random.fold_in(jax.random.key(seed[0]), dev)
             step_ids = jnp.arange(H, dtype=jnp.int32)
             t_fracs = t_frac0 + dt_frac * step_ids.astype(jnp.float32)
             y = layout_engine.scan_layout_steps(
                 y_loc[0], base_key, step_ids, t_fracs,
-                edge_sampler=edge_sampler, neg_sampler=neg_sampler,
+                edge_sampler=es, neg_sampler=neg_sampler,
                 n_negatives=cfg.n_negatives, n_nodes=n_nodes,
                 prob_fn=cfg.prob_fn, a=cfg.prob_a, gamma=cfg.gamma,
                 clip=cfg.grad_clip, rho0=cfg.rho0, batch=batch,
                 fused_step=bool(getattr(cfg, "fused_step", True)))
-            return y[None]
+            # Hogwild-sum sync: the round-start state is this body's own
+            # input (replicas enter a round identical), so the delta
+            # combine costs no extra dispatch or y0 copy.  Skipped
+            # entirely at P=1: `y0 + (y - y0)` is NOT bitwise `y`
+            # (rounding), and the single-device trajectory must stay
+            # bit-identical to the flat drivers
+            if mesh.shape["data"] == 1:
+                return y[None]
+            return (y_loc[0] + jax.lax.psum(y - y_loc[0], "data"))[None]
 
         return shard_map(
             body, mesh=mesh,
-            in_specs=(dp_spec, rep, rep, rep, rep, rep),
+            in_specs=(dp_spec, rep, rep, rep, _edge_in_spec(edge_sampler),
+                      rep),
             out_specs=dp_spec, check_vma=False,
         )(y_rep, seed, t_frac0, dt_frac, edge_sampler, neg_sampler)
 
-    def sync(y_rep):
-        """psum-average the replicas (the every-H synchronization)."""
-
-        def body(y_loc):
-            return jax.lax.pmean(y_loc, "data")
-
-        return shard_map(body, mesh=mesh, in_specs=dp_spec,
-                         out_specs=dp_spec, check_vma=False)(y_rep)
-
-    return jax.jit(local_steps, donate_argnums=(0,)), jax.jit(sync)
+    return jax.jit(local_steps, donate_argnums=(0,))
 
 
 def run_layout_local_sgd(key, edge_sampler: EdgeSampler,
@@ -154,14 +195,17 @@ def run_layout_local_sgd(key, edge_sampler: EdgeSampler,
     from jax.sharding import NamedSharding, PartitionSpec as P
     y_rep = jax.device_put(y_rep, NamedSharding(mesh, P("data", None, None)))
 
-    # every device applies a full batch per local step, so the per-replica
-    # collision cap applies to each device's batch independently
-    batch = _collision_capped_batch(cfg.batch_size, n_nodes)
+    # the replicas' batches apply concurrently between syncs (Hogwild-sum
+    # combine), so the collision cap bounds the GLOBAL concurrent batch
+    # batch * n_dev at ~N/2, split evenly per replica (at n_dev=1 this is
+    # exactly the single-device cap)
+    batch = max(1, _collision_capped_batch(cfg.batch_size * n_dev,
+                                           n_nodes) // n_dev)
     total = int(cfg.samples_per_node) * n_nodes
     steps = max(1, total // (batch * n_dev))
     H = max(1, cfg.sync_every)
     n_rounds = max(1, steps // H)
-    local_steps, sync = make_local_sgd_fns(mesh, cfg, n_nodes, batch=batch)
+    local_steps = make_local_sgd_fns(mesh, cfg, n_nodes, batch=batch)
     dt = 1.0 / max(steps, 1)
     # one batched draw + one device->host transfer for ALL round seeds:
     # deriving each round's seed with int(...) inside the loop forced a
@@ -172,7 +216,6 @@ def run_layout_local_sgd(key, edge_sampler: EdgeSampler,
         y_rep = local_steps(
             y_rep, jnp.asarray(seeds[r:r + 1]), jnp.float32(r * H * dt),
             jnp.float32(dt), edge_sampler, neg_sampler)
-        y_rep = sync(y_rep)
     return LayoutResult(y=y_rep[0], steps=n_rounds * H,
                         edge_samples=n_rounds * H * batch * n_dev)
 

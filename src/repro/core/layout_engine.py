@@ -11,7 +11,11 @@ module fuses the loop into the compiled program:
   and per-step paths stay numerically identical.  Samplers enter as the
   :class:`~repro.core.sampler.EdgeSampler` / ``NodeSampler`` pytrees —
   one argument per sampler threaded through ``jit``/``scan``/``shard_map``,
-  not six unpacked table arrays.
+  not six unpacked table arrays.  Samplers are duck-typed: anything with
+  ``.sample(key, ...)`` works, so the per-shard samplers from
+  ``sampler.build_samplers_sharded`` (a device's local ``EdgeSampler``
+  slice, the two-level ``ShardedNodeSampler``) flow through the same
+  step body unchanged — sharding lives in the drivers, not here.
 * :func:`scan_layout_steps` — ``jax.lax.scan`` over the step body.  Used
   unjitted inside ``shard_map`` by the local-SGD drivers (replacing their
   hand-rolled ``fori_loop`` wiring) and jitted below for the single-device

@@ -74,7 +74,8 @@ def _tile_explore(x, knn_idx, knn_dist, rev, rows, key, sample: int):
 
 def sharded_explore_round(x_loc, ids_loc, knn_idx_loc, knn_dist_loc, *,
                           axis: str, n_shards: int, n_real: int,
-                          key=None, sample: int = 0, r_cap: int = 0):
+                          key=None, sample: int = 0, r_cap: int = 0,
+                          tile: int = 0):
     """One neighbor-exploring round for this shard's tile of rows.
 
     Must be called inside a shard_map body over mesh axis ``axis``.
@@ -88,8 +89,15 @@ def sharded_explore_round(x_loc, ids_loc, knn_idx_loc, knn_dist_loc, *,
     all-gathered so each shard can read its rows' forward and reverse
     neighbors; candidate *coordinates* are never gathered: distances are
     filled over ``n_shards`` ring steps, each touching only the remote
-    (n_loc, d) slab currently held.  Returns merged (idx, dist) for the
-    local rows.
+    (n_loc, d) slab currently held.  Within each ring step the
+    coordinate gather runs over row tiles (``lax.map``, same element
+    budget as single-device ``neighbor_explore``) so the (T, C, d)
+    gather temporary stays bounded by the tile — without this the step
+    materialized an O(n_loc * K^2 * d) buffer, ~15 GB at the paper's
+    N=1M on one shard (the blow-up ``tests/memcheck.py`` now forbids).
+    Candidate *id/distance* tables stay whole-slab: (n_loc, C) working
+    sets are the per-shard output-order footprint the ring design
+    budgets for.  Returns merged (idx, dist) for the local rows.
     """
     n_loc, K = knn_idx_loc.shape
     r_cap = r_cap or K
@@ -107,21 +115,41 @@ def sharded_explore_round(x_loc, ids_loc, knn_idx_loc, knn_dist_loc, *,
     cand = jnp.where(cand >= n_real, ids_loc[:, None], cand)    # pad -> self
 
     # --- ring pass: fill candidate distances from streamed slabs --------
+    C = cand.shape[1]
+    d = x_loc.shape[1]
+    budget = 64 * (1 << 20)                  # ~256 MB of f32 per gather
+    T = int(tile) or max(16, min(n_loc, budget // max(1, C * d)))
+    n_tiles = -(-n_loc // T)
+    pad = n_tiles * T - n_loc
+    if pad:
+        cand_p = jnp.concatenate([cand, jnp.zeros((pad, C), cand.dtype)])
+        x_p = jnp.concatenate([x_loc, jnp.zeros((pad, d), x_loc.dtype)])
+    else:
+        cand_p, x_p = cand, x_loc
+    cand_t = cand_p.reshape(n_tiles, T, C)
+    x_t = x_p.reshape(n_tiles, T, d)
+
     def ring_step(_, carry):
         cd, rx, roff = carry
-        rel = cand - roff
-        in_rng = (rel >= 0) & (rel < n_loc)
-        xc = rx[jnp.clip(rel, 0, n_loc - 1)]                    # (n_loc,C,d)
-        diff = (xc - x_loc[:, None, :]).astype(jnp.float32)
-        dd = jnp.sum(diff * diff, axis=-1)
-        cd = jnp.where(in_rng, dd, cd)
+
+        def one(args):
+            cand_b, cd_b, x_b = args
+            rel = cand_b - roff
+            in_rng = (rel >= 0) & (rel < n_loc)
+            xc = rx[jnp.clip(rel, 0, n_loc - 1)]                # (T, C, d)
+            diff = (xc - x_b[:, None, :]).astype(jnp.float32)
+            dd = jnp.sum(diff * diff, axis=-1)
+            return jnp.where(in_rng, dd, cd_b)
+
+        cd = jax.lax.map(one, (cand_t, cd, x_t))
         rx = jax.lax.ppermute(rx, axis, perm)
         roff = jax.lax.ppermute(roff, axis, perm)
         return cd, rx, roff
 
-    cd0 = jnp.full(cand.shape, knn_lib.INF, jnp.float32)
+    cd0 = jnp.full((n_tiles, T, C), knn_lib.INF, jnp.float32)
     cd, _, _ = jax.lax.fori_loop(
         0, n_shards, ring_step, (cd0, x_loc, ids_loc[0]))
+    cd = cd.reshape(n_tiles * T, C)[:n_loc]
 
     ids = jnp.concatenate([knn_idx_loc, cand], axis=1)
     ds = jnp.concatenate([knn_dist_loc, cd], axis=1)

@@ -35,6 +35,20 @@ marginals against the Vose oracle via threshold/alias reconstruction.
 :class:`EdgeSampler` / :class:`NodeSampler` are registered JAX pytrees, so
 whole samplers thread through ``jit`` / ``lax.scan`` / ``shard_map`` as
 single arguments (see ``core/layout_engine.py``).
+
+Distributed mode (:func:`build_samplers_sharded`) builds **per-shard**
+tables on the same 1-D "data" mesh the KNN ring and the perplexity
+stages use: each shard runs :func:`_alias_pairing` over its own rows'
+edges (local alias indices — a slab sliced out of a *global* table
+would carry alias pointers outside the slab and be invalid), negative
+degrees are completed with one ``psum`` of O(N) scatter partials, and a
+tiny (P,)-entry shard-selection alias table over per-shard total masses
+makes the two-level draw exactly proportional to the global
+distribution: P(shard s) * P(e | s) = (T_s / T) * (w_e / T_s) = w_e / T.
+:class:`ShardedEdgeSampler` / :class:`ShardedNodeSampler` expose the
+same duck-typed ``.sample`` the layout engine consumes, so they flow
+through every driver unchanged; at ``n_shards == 1`` they skip the
+shard draw and reproduce the flat samplers' key streams bitwise.
 """
 from __future__ import annotations
 
@@ -45,6 +59,8 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.runtime.compat import shard_map
 
 
 def build_alias(probs: np.ndarray):
@@ -239,9 +255,86 @@ class NodeSampler:
         return sample_alias(key, self.threshold, self.alias, shape)
 
 
+@dataclasses.dataclass
+class ShardedEdgeSampler:
+    """Per-shard edge alias tables with a shard-selection table on top.
+
+    All per-shard leaves are stacked ``(P, E_loc)``; ``alias`` entries
+    are LOCAL edge indices (each shard's table is closed over its own
+    edges), ``src``/``dst`` hold GLOBAL node ids.  ``shard_threshold``/
+    ``shard_alias`` is a (P,)-entry alias table over per-shard total
+    edge masses, so a two-level draw is exactly ∝ the global w_ij.
+
+    Registered pytree (``n_shards``/``n_edges`` static); duck-types
+    :class:`EdgeSampler` for the layout engine.  At ``n_shards == 1``
+    ``sample`` delegates to the flat sampler on table row 0 — the
+    identical key stream, for bitwise trajectory parity."""
+    src: jax.Array              # (P, E_loc) int32, global node ids
+    dst: jax.Array              # (P, E_loc) int32
+    threshold: jax.Array        # (P, E_loc) f32
+    alias: jax.Array            # (P, E_loc) int32, LOCAL edge indices
+    shard_threshold: jax.Array  # (P,) f32
+    shard_alias: jax.Array      # (P,) int32
+    n_shards: int
+    n_edges: int                # total real (unpadded) directed edges
+
+    def local(self, i: int = 0) -> EdgeSampler:
+        """The flat per-shard sampler from stacked-table row ``i`` —
+        what a shard_map body (leaves arriving as (1, E_loc) blocks)
+        uses for stratified local sampling."""
+        return EdgeSampler(self.src[i], self.dst[i], self.threshold[i],
+                           self.alias[i], int(self.src.shape[1]))
+
+    def sample(self, key, batch: int):
+        if self.n_shards == 1:
+            return self.local().sample(key, batch)
+        k0, k1 = jax.random.split(key)
+        s = sample_alias(k0, self.shard_threshold, self.shard_alias,
+                         (batch,))
+        e_loc = self.threshold.shape[1]
+        k1a, k1b = jax.random.split(k1)
+        idx = jax.random.randint(k1a, (batch,), 0, e_loc)
+        u = jax.random.uniform(k1b, (batch,))
+        e = jnp.where(u < self.threshold[s, idx], idx, self.alias[s, idx])
+        return self.src[s, e], self.dst[s, e]
+
+
+@dataclasses.dataclass
+class ShardedNodeSampler:
+    """Per-shard noise distribution P_n(j) ∝ deg_j^power over the
+    contiguous-block row layout: local node ``l`` on shard ``s`` is
+    global node ``s * n_loc + l`` (``runtime/sharding.py``).  Padded
+    rows carry exactly-zero mass, so padded ids are never drawn."""
+    threshold: jax.Array        # (P, n_loc) f32
+    alias: jax.Array            # (P, n_loc) int32, LOCAL node indices
+    shard_threshold: jax.Array  # (P,) f32
+    shard_alias: jax.Array      # (P,) int32
+    n_shards: int
+    n_nodes: int                # real (unpadded) node count
+
+    def sample(self, key, shape):
+        if self.n_shards == 1:
+            return sample_alias(key, self.threshold[0], self.alias[0],
+                                shape)
+        k0, k1 = jax.random.split(key)
+        s = sample_alias(k0, self.shard_threshold, self.shard_alias, shape)
+        n_loc = self.threshold.shape[1]
+        k1a, k1b = jax.random.split(k1)
+        idx = jax.random.randint(k1a, shape, 0, n_loc)
+        u = jax.random.uniform(k1b, shape)
+        l = jnp.where(u < self.threshold[s, idx], idx, self.alias[s, idx])
+        return (s * n_loc + l).astype(jnp.int32)
+
+
 _register_pytree(EdgeSampler, ("src", "dst", "threshold", "alias"),
                  ("n_edges",))
 _register_pytree(NodeSampler, ("threshold", "alias"), ("n_nodes",))
+_register_pytree(ShardedEdgeSampler,
+                 ("src", "dst", "threshold", "alias", "shard_threshold",
+                  "shard_alias"), ("n_shards", "n_edges"))
+_register_pytree(ShardedNodeSampler,
+                 ("threshold", "alias", "shard_threshold", "shard_alias"),
+                 ("n_shards", "n_nodes"))
 
 
 def _resolve_impl(impl: str) -> str:
@@ -315,3 +408,90 @@ def build_negative_sampler(knn_idx, weights, *, power: float = 0.75,
     deg = np.maximum(deg, 1e-12) ** power
     thr, alias = build_alias(deg)
     return NodeSampler(jnp.asarray(thr), jnp.asarray(alias), N)
+
+
+# ---------------------------------------------------------------------------
+# Sharded build (1-D "data" mesh — same row layout as the KNN ring)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _make_sharded_builder_fn(mesh, axis: str, n_real: int, power: float,
+                             hi_dtype):
+    """jit'd shard_map body building one shard's edge + negative tables.
+
+    Each shard pairs its OWN flat edge weights (local alias indices —
+    valid by construction, unlike a slab cut out of a global table) and
+    its own rows' degree^power masses; in-degree contributions landing
+    on other shards' rows travel through one O(N) ``psum``.  Per-shard
+    total masses come back stacked for the host-side (P,) shard table."""
+    from jax.sharding import PartitionSpec as P
+
+    n_shards = mesh.shape[axis]
+
+    def body(idx_loc, w_loc, ids_loc):
+        n_loc, K = idx_loc.shape
+        w = jnp.maximum(w_loc.astype(jnp.float32), 0.0)
+        flat_w = w.reshape(-1)
+
+        # --- edge table over this shard's own edges --------------------
+        src = jnp.repeat(ids_loc.astype(jnp.int32), K)
+        dst = idx_loc.reshape(-1).astype(jnp.int32)
+        ethr, eali = _alias_pairing(flat_w, hi_dtype=hi_dtype)
+        t_edge = jnp.sum(flat_w.astype(hi_dtype))
+
+        # --- negative table over this shard's own rows -----------------
+        # deg_j = out_j + in_j; in-degree scatters land anywhere, so each
+        # shard scatters into an O(N) partial and one psum completes it
+        out_deg = jnp.sum(w, axis=1)
+        part = jnp.zeros((n_loc * n_shards,), jnp.float32)
+        part = part.at[idx_loc.reshape(-1)].add(flat_w)
+        in_deg = jax.lax.psum(part, axis)
+        deg = out_deg + jax.lax.dynamic_slice_in_dim(in_deg, ids_loc[0],
+                                                     n_loc)
+        # exact zero for padded rows — a clamped epsilon^power would give
+        # out-of-range node ids a small but nonzero draw probability
+        mass = jnp.where(ids_loc < n_real,
+                         jnp.maximum(deg, 1e-12) ** power, 0.0)
+        nthr, nali = _alias_pairing(mass, hi_dtype=hi_dtype)
+        t_node = jnp.sum(mass.astype(hi_dtype))
+        return (src[None], dst[None], ethr[None], eali[None], t_edge[None],
+                nthr[None], nali[None], t_node[None])
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis)),
+        out_specs=(P(axis, None), P(axis, None), P(axis, None),
+                   P(axis, None), P(axis), P(axis, None), P(axis, None),
+                   P(axis)), check_vma=False)
+    return jax.jit(fn)
+
+
+def build_samplers_sharded(knn_idx, weights, *, power: float = 0.75,
+                           mesh=None, axis: str = "data"):
+    """(ShardedEdgeSampler, ShardedNodeSampler) built on the data mesh.
+
+    Rows pad to a shard multiple with zero weight (padded edges/nodes
+    get exactly-zero mass at every level, so they are never drawn); the
+    graph never leaves the mesh — per-shard tables are built where the
+    rows already live, and only the (P,) total-mass vectors reach the
+    host-free top-level pairing for the shard-selection tables."""
+    from repro.runtime import sharding as sh
+    if mesh is None:
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(0)
+    n_shards = mesh.shape[axis]
+    N, K = knn_idx.shape
+    idx_p = sh.pad_rows(jnp.asarray(knn_idx, jnp.int32), n_shards)
+    w_p = sh.pad_rows(jnp.asarray(weights, jnp.float32), n_shards)
+    ids = jnp.arange(idx_p.shape[0], dtype=jnp.int32)
+    scope, hi_dtype = _pairing_scope()
+    with scope:
+        fn = _make_sharded_builder_fn(mesh, axis, N, float(power), hi_dtype)
+        (src, dst, ethr, eali, t_edge,
+         nthr, nali, t_node) = fn(idx_p, w_p, ids)
+        sthr_e, sali_e = _alias_jit(t_edge, hi_dtype=hi_dtype)
+        sthr_n, sali_n = _alias_jit(t_node, hi_dtype=hi_dtype)
+    edge_s = ShardedEdgeSampler(src, dst, ethr, eali, sthr_e, sali_e,
+                                n_shards, N * K)
+    node_s = ShardedNodeSampler(nthr, nali, sthr_n, sali_n, n_shards, N)
+    return edge_s, node_s

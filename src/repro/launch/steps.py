@@ -222,8 +222,11 @@ def make_largevis_step_local(mesh, *, n_nodes: int, n_edges: int,
                 jnp.broadcast_to(t_frac, (sync_every,)).astype(jnp.float32),
                 edge_sampler=es, neg_sampler=ns, n_negatives=n_negatives,
                 n_nodes=n_nodes, batch=b_loc, fused_step=fused_step)
-            # merge replicas: average the deltas (one psum per H steps)
-            return y0 + jax.lax.pmean(y - y0, dp)
+            # merge replicas: Hogwild-sum of the deltas (one psum per H
+            # steps) — every sampled edge's update lands at full lr, as
+            # in the paper's async SGD; a mean would under-step the
+            # schedule P-fold (see core/layout.make_local_sgd_fns)
+            return y0 + jax.lax.psum(y - y0, dp)
 
         return shard_map(
             body, mesh=mesh,
@@ -240,6 +243,85 @@ def make_largevis_step_local(mesh, *, n_nodes: int, n_edges: int,
                  sds((n_edges,), f32), sds((n_edges,), i32),
                  sds((n_nodes,), f32), sds((n_nodes,), i32))
     in_sh = (rep, rep, rep, table, table, table, table, rep, rep)
+    return step, arg_specs, in_sh, rep
+
+
+def make_largevis_step_sharded(mesh, *, n_nodes: int, n_edges: int,
+                               batch: int, out_dim: int = 2,
+                               n_negatives: int = 5, sync_every: int = 8,
+                               fused_step: bool = True):
+    """Local-SGD step over the *per-shard* sampler tables that
+    ``sampler.build_samplers_sharded`` emits (PR 6 pipeline form).
+
+    Unlike ``make_largevis_step_local`` — which slices one flat global
+    alias table into slabs, leaving alias pointers that cross slab
+    boundaries dangling — this builder's wire format is the stacked
+    (P, E_loc) tables whose alias entries are LOCAL edge indices, so a
+    device's slice is a self-contained alias table over exactly its
+    edge shard (the reference implementation's per-thread sampling
+    range).  Negatives sample *globally* through the two-level
+    :class:`~repro.core.sampler.ShardedNodeSampler` (tiny replicated
+    shard-selection table + stacked per-shard node tables), matching
+    the paper's noise distribution P_n(j) ∝ deg(j)^0.75 over ALL nodes.
+
+    Wire format: eleven flat arrays (per-array shardings for the
+    dry-run lowering interface) — edge tables shard their leading (P,)
+    axis over DP; neg + shard-selection tables replicate.
+    """
+    from repro.core.layout_engine import scan_layout_steps
+    from repro.core.sampler import EdgeSampler, ShardedNodeSampler
+
+    dp = sh.dp_axes(mesh)
+    n_shards = 1
+    for a in dp:
+        n_shards *= mesh.shape[a]
+    if n_edges % n_shards:
+        raise ValueError(f"n_edges={n_edges} not a multiple of the DP "
+                         f"size {n_shards} (pad rows first)")
+    e_loc = n_edges // n_shards
+    n_loc = -(-n_nodes // n_shards)
+    b_loc = max(1, batch // n_shards)
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    def step(y, seed, t_frac, edge_src, edge_dst, edge_thr, edge_alias,
+             neg_thr, neg_alias, neg_sthr, neg_sali):
+        def body(y, seed, t_frac, esrc, edst, ethr, eali, nthr, nali,
+                 nsthr, nsali):
+            dev = jax.lax.axis_index(dp[-1])
+            if len(dp) > 1:
+                dev = dev + mesh.shape[dp[-1]] * jax.lax.axis_index(dp[0])
+            y0 = y
+            es = EdgeSampler(esrc[0], edst[0], ethr[0], eali[0], e_loc)
+            ns = ShardedNodeSampler(nthr, nali, nsthr, nsali, n_shards,
+                                    n_nodes)
+            base_key = jax.random.fold_in(jax.random.key(seed[0]), dev)
+            step_ids = jnp.arange(sync_every, dtype=jnp.int32)
+            y = scan_layout_steps(
+                y, base_key, step_ids,
+                jnp.broadcast_to(t_frac, (sync_every,)).astype(jnp.float32),
+                edge_sampler=es, neg_sampler=ns, n_negatives=n_negatives,
+                n_nodes=n_nodes, batch=b_loc, fused_step=fused_step)
+            # Hogwild-sum delta merge (see make_largevis_step_local)
+            return y0 + jax.lax.psum(y - y0, dp)
+
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(), P(), P(dp, None), P(dp, None), P(dp, None),
+                      P(dp, None), P(), P(), P(), P()),
+            out_specs=P(), check_vma=False,
+        )(y, seed, t_frac, edge_src, edge_dst, edge_thr, edge_alias,
+          neg_thr, neg_alias, neg_sthr, neg_sali)
+
+    rep = NamedSharding(mesh, P())
+    table = NamedSharding(mesh, sh._guard(mesh, (n_shards, e_loc),
+                                          [dp, None]))
+    arg_specs = (sds((n_nodes, out_dim), f32), sds((1,), i32), sds((), f32),
+                 sds((n_shards, e_loc), i32), sds((n_shards, e_loc), i32),
+                 sds((n_shards, e_loc), f32), sds((n_shards, e_loc), i32),
+                 sds((n_shards, n_loc), f32), sds((n_shards, n_loc), i32),
+                 sds((n_shards,), f32), sds((n_shards,), i32))
+    in_sh = (rep, rep, rep, table, table, table, table, rep, rep, rep, rep)
     return step, arg_specs, in_sh, rep
 
 

@@ -115,6 +115,36 @@ def dp_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.shape else ("data",)
 
 
+# ---------------------------------------------------------------------------
+# Row-sharding layout for the 1-D "data" mesh pipeline stages
+# ---------------------------------------------------------------------------
+#
+# Every mesh stage of the LargeVis pipeline (the KNN ring, perplexity
+# calibration, symmetrization, the sampler build) shards its N rows the
+# same way: pad N up to a multiple of the shard count, then give each
+# shard one contiguous block of ``rows_per_shard`` rows — so shard s owns
+# global rows [s * rows_per_shard, (s + 1) * rows_per_shard) and a local
+# row l maps to global id ``s * rows_per_shard + l``.  Keeping one layout
+# across stages is what lets the graph stay device-resident between them:
+# a stage's output shards are exactly the next stage's input shards.
+
+def rows_per_shard(n: int, n_shards: int) -> int:
+    """Rows each shard owns after padding ``n`` to a shard multiple."""
+    return -(-n // max(1, n_shards))
+
+
+def pad_rows(x, n_shards: int, fill=0):
+    """Pad axis 0 of ``x`` to ``rows_per_shard(n, P) * P`` rows with
+    ``fill`` (device-resident — ``jnp.pad``, no host round trip)."""
+    import jax.numpy as jnp
+    n = x.shape[0]
+    n_pad = rows_per_shard(n, n_shards) * n_shards - n
+    if n_pad == 0:
+        return x
+    widths = [(0, n_pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
 def fsdp_axis(mesh: Mesh, train: bool):
     return "data" if train else None
 

@@ -1,0 +1,160 @@
+"""Shared HLO/StableHLO assertion helpers for pipeline-stage tests.
+
+PRs 1/3/5 hand-rolled the same two checks in every kernel test — "this
+lowering never materializes a buffer shaped like the thing we fused
+away" and "this lowering contains no <op>" — as raw substring matches
+against ``lowered.as_text()``.  This module promotes them into one
+parsed, documented helper set used by every stage test (and by the
+``tests/memcheck.py`` peak-memory harness).
+
+Two text formats appear in practice and both are handled:
+
+* StableHLO MLIR from ``jax.jit(f).lower(...).as_text()`` — buffers are
+  ``tensor<403x7xf32>``;
+* optimized HLO from ``.lower(...).compile().as_text()`` — buffers are
+  ``f32[403,7]{1,0}``.
+
+The buffer checks parse every typed buffer out of the text, so they are
+robust to formatting (no accidental substring hits inside constants or
+metadata) and can reason in *bytes*, which is what the O(N·K·K) /
+O(N²/P) memory invariants are actually about.  Op checks stay substring
+matches on purpose: HLO op mnemonics (``sort``, ``while``,
+``custom-call``, ``dynamic-slice``) are short and the call sites want
+"none anywhere in the program" semantics.
+"""
+from __future__ import annotations
+
+import re
+
+# dtype byte widths for every dtype jax lowers in this repo; unknown
+# dtypes conservatively count as 4 bytes
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "i1": 1,
+    "i64": 8, "i32": 4, "i16": 2, "i8": 1,
+}
+
+# tensor<2x3xf32> / tensor<f32>; dims group is the leading "2x3x"
+_MLIR_RE = re.compile(r"tensor<((?:\d+x)*)([a-z][a-z0-9]*)>")
+# f32[2,3]{1,0} / pred[] — require the bracket to follow the dtype token
+_HLO_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def dtype_bytes(dtype: str) -> int:
+    return _DTYPE_BYTES.get(dtype, 4)
+
+
+def iter_buffers(text: str):
+    """Yield every typed buffer in ``text`` as ``(dtype, shape, nbytes)``.
+
+    ``shape`` is a tuple of ints (``()`` for scalars).  Works on both
+    StableHLO MLIR and optimized-HLO text; duplicates are yielded as
+    often as they appear (callers that want distinct shapes can set()).
+    """
+    for m in _MLIR_RE.finditer(text):
+        dims, dtype = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split("x") if d)
+        yield dtype, shape, _nbytes(dtype, shape)
+    for m in _HLO_RE.finditer(text):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        yield dtype, shape, _nbytes(dtype, shape)
+
+
+def _nbytes(dtype: str, shape) -> int:
+    n = dtype_bytes(dtype)
+    for d in shape:
+        n *= d
+    return n
+
+
+def _shape_contains(shape, dims) -> bool:
+    """True when ``dims`` appears as a contiguous run inside ``shape``
+    (so ``(N, K, K)`` matches both ``tensor<NxKxKxf32>`` and a scanned
+    ``tensor<TxNxKxKxf32>``)."""
+    dims = tuple(dims)
+    k = len(dims)
+    return any(shape[i:i + k] == dims for i in range(len(shape) - k + 1))
+
+
+def has_buffer(text: str, dims, dtype: str | None = None) -> bool:
+    """True if any buffer's shape contains the contiguous ``dims`` run
+    (optionally restricted to ``dtype``)."""
+    for dt, shape, _ in iter_buffers(text):
+        if dtype is not None and dt != dtype:
+            continue
+        if _shape_contains(shape, dims):
+            return True
+    return False
+
+
+def assert_no_buffer(text: str, dims, dtype: str | None = None,
+                     what: str = ""):
+    """Assert no buffer whose shape contains the ``dims`` run exists —
+    the "we fused this temporary away" check."""
+    offenders = sorted({
+        (dt, shape) for dt, shape, _ in iter_buffers(text)
+        if (dtype is None or dt == dtype) and _shape_contains(shape, dims)
+    })
+    assert not offenders, (
+        f"forbidden buffer shape {tuple(dims)} "
+        f"{'(' + what + ') ' if what else ''}found in lowering: "
+        f"{offenders[:8]}")
+
+
+def assert_no_buffer_larger_than(text: str, limit_bytes: int,
+                                 what: str = ""):
+    """Assert every buffer in ``text`` is at most ``limit_bytes``.
+
+    This is the shared peak-memory invariant: pick ``limit_bytes``
+    between the stage's legitimate output size and the forbidden
+    O(N·K·K) / O(N²/P) blow-up, and any super-linear temporary fails
+    loudly with its shape and size."""
+    offenders = sorted(
+        {(nb, dt, shape) for dt, shape, nb in iter_buffers(text)
+         if nb > limit_bytes},
+        reverse=True)
+    assert not offenders, (
+        f"buffer(s) over {limit_bytes} bytes "
+        f"{'(' + what + ') ' if what else ''}in lowering: "
+        + ", ".join(f"{dt}{list(shape)}={nb}B"
+                    for nb, dt, shape in offenders[:8]))
+
+
+def largest_buffer(text: str):
+    """(nbytes, dtype, shape) of the largest buffer, or (0, '', ())."""
+    best = (0, "", ())
+    for dt, shape, nb in iter_buffers(text):
+        if nb > best[0]:
+            best = (nb, dt, shape)
+    return best
+
+
+def count_op(text: str, op: str) -> int:
+    """Occurrences of the op mnemonic (plain substring count — HLO op
+    names are short and unambiguous in practice)."""
+    return text.count(op)
+
+
+def assert_no_op(text: str, *ops: str, what: str = ""):
+    """Assert none of the op mnemonics appear anywhere in the text
+    (e.g. ``assert_no_op(hlo, "sort", "top_k")`` for a fused top-k)."""
+    hit = [op for op in ops if op in text]
+    assert not hit, (
+        f"forbidden op(s) {hit} {'(' + what + ') ' if what else ''}"
+        f"present in lowering")
+
+
+def assert_has_op(text: str, *ops: str, what: str = ""):
+    """Assert every op mnemonic appears (sanity check that the lowering
+    actually contains the structure the negative checks constrain)."""
+    missing = [op for op in ops if op not in text]
+    assert not missing, (
+        f"expected op(s) {missing} {'(' + what + ') ' if what else ''}"
+        f"absent from lowering")

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import hlo_checks
+
 from repro.configs.largevis_default import LargeVisConfig
 from repro.core import layout as layout_lib
 from repro.core import sampler as sampler_lib
@@ -231,11 +233,13 @@ def test_fused_hlo_emits_no_split_buffers():
         return layout_lib.layout_step.lower(
             y0, KEY, jnp.float32(0.1), **kw).as_text()
 
-    concat_buf = f"{(2 + M) * B}x{s}xf32"
-    flat_neg = f"{B}x{M * s}xf32"
+    concat_buf = ((2 + M) * B, s)
+    flat_neg = (B, M * s)
     hlo_fused = lower(True)
-    assert concat_buf not in hlo_fused, concat_buf
-    assert flat_neg not in hlo_fused, flat_neg
+    hlo_checks.assert_no_buffer(hlo_fused, concat_buf, "f32",
+                                what="concatenated update buffer")
+    hlo_checks.assert_no_buffer(hlo_fused, flat_neg, "f32",
+                                what="flattened negative operand")
     # contrast: the split path really does build the concat update buffer
     hlo_split = lower(False)
-    assert concat_buf in hlo_split
+    assert hlo_checks.has_buffer(hlo_split, concat_buf, "f32")

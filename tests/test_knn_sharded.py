@@ -29,8 +29,11 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, SRC)
+sys.path.insert(0, TESTS)
 import math
 import jax, jax.numpy as jnp, numpy as np
+
+import hlo_checks
 
 from repro.configs.largevis_default import LargeVisConfig
 from repro.core import knn as knn_lib
@@ -78,11 +81,14 @@ fn = knn_sharded._make_sharded_fn(
 hlo = fn.lower(x, jnp.arange(N, dtype=jnp.int32),
                jnp.zeros((32, 20), jnp.float32),
                jnp.zeros((1,), jnp.int32)).as_text()
-# per-shard tiles are present; the full matrices are not (MLIR AxBxf32)
-assert f"{n_loc}x{n_loc}xf32" in hlo, "expected per-shard distance tiles"
-assert f"{N}x{N}x" not in hlo, "full NxN distance matrix materialized"
+# per-shard tiles are present; the full matrices are not
+assert hlo_checks.has_buffer(hlo, (n_loc, n_loc), "f32"), (
+    "expected per-shard distance tiles")
+hlo_checks.assert_no_buffer(hlo, (N, N),
+                            what="full NxN distance matrix materialized")
 C = 15 * 15 + 15
-assert f"{N}x{C}x" not in hlo, "candidate buffer all-gathered"
+hlo_checks.assert_no_buffer(hlo, (N, C),
+                            what="candidate buffer all-gathered")
 
 idx_1, _ = knn_lib.build_knn_graph(
     x, KEY, LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=2,
@@ -117,7 +123,9 @@ print("EXACT_MODE_OK")
 
 @pytest.mark.slow
 def test_sharded_knn_multi_device():
-    script = _SCRIPT.replace("SRC", repr(os.path.join(REPO, "src")))
+    script = (_SCRIPT
+              .replace("SRC", repr(os.path.join(REPO, "src")))
+              .replace("TESTS", repr(os.path.join(REPO, "tests"))))
     proc = subprocess.run([sys.executable, "-c", script],
                           capture_output=True, text=True, timeout=1500)
     assert proc.returncode == 0, proc.stderr[-4000:]

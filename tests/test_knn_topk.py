@@ -14,6 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import hlo_checks
+
 from repro.configs.largevis_default import LargeVisConfig
 from repro.core import knn as knn_lib
 from repro.data.synthetic import gaussian_mixture
@@ -141,27 +143,32 @@ def test_hlo_brute_force_no_distance_matrix():
     # fused path: no (M, N) buffer, no (tile, N) buffer, no sort, no top_k
     hlo = knn_lib.brute_force_knn.lower(x, 10, tile=512,
                                         impl="fused").as_text()
-    assert "8192x8192" not in hlo, "full NxN distance matrix"
-    assert "512x8192" not in hlo, "materialized (tile, N) row-tile buffer"
-    assert "sort" not in hlo and "top_k" not in hlo, (
-        "post-kernel sort/top_k on the fused path")
+    hlo_checks.assert_no_buffer(hlo, (8192, 8192),
+                                what="full NxN distance matrix")
+    hlo_checks.assert_no_buffer(hlo, (512, 8192),
+                                what="materialized (tile, N) row-tile")
+    hlo_checks.assert_no_op(hlo, "sort", "top_k",
+                            what="post-kernel sort/top_k on the fused path")
     # the streaming oracle path holds no (M, N)/(tile, N) buffer either
     hlo_ref = knn_lib.brute_force_knn.lower(x, 10, tile=2048,
                                             impl="ref").as_text()
-    assert "8192x8192" not in hlo_ref
-    assert "2048x8192" not in hlo_ref, "(tile, N) buffer on the ref path"
+    hlo_checks.assert_no_buffer(hlo_ref, (8192, 8192))
+    hlo_checks.assert_no_buffer(hlo_ref, (2048, 8192),
+                                what="(tile, N) buffer on the ref path")
 
 
 def test_hlo_forest_window_fused_no_sort_topk():
     x = jnp.zeros((2048, 16), jnp.float32)
     hlo = knn_lib.forest_knn.lower(x, KEY, n_trees=4, depth=5, k=10,
                                    window=32, impl="fused").as_text()
-    assert "top_k" not in hlo, "post-kernel top_k on the fused window path"
+    hlo_checks.assert_no_op(hlo, "top_k",
+                            what="post-kernel top_k on the fused window path")
     # the only sorts are the per-tree argsort of bucket codes (one scan
     # body) — the merge itself is sort-free
-    assert hlo.count("sort") == knn_lib.forest_knn.lower(
-        x, KEY, n_trees=8, depth=5, k=10, window=32,
-        impl="fused").as_text().count("sort"), (
+    assert hlo_checks.count_op(hlo, "sort") == hlo_checks.count_op(
+        knn_lib.forest_knn.lower(x, KEY, n_trees=8, depth=5, k=10,
+                                 window=32, impl="fused").as_text(),
+        "sort"), (
         "sort count grows with n_trees — tree body unrolled or the "
         "fused merge sorts")
 
@@ -177,9 +184,10 @@ def test_hlo_sharded_ring_fused_no_buffers():
                    jnp.arange(N, dtype=jnp.int32),
                    jnp.zeros((16, 20), jnp.float32),
                    jnp.zeros((1,), jnp.int32)).as_text()
-    assert "sort" not in hlo and "top_k" not in hlo, (
-        "post-kernel sort/top_k in the fused ring step")
-    assert f"{N}x{N}" not in hlo, "(n_loc, n_loc) distance buffer"
+    hlo_checks.assert_no_op(hlo, "sort", "top_k",
+                            what="post-kernel sort/top_k in the fused ring")
+    hlo_checks.assert_no_buffer(hlo, (N, N),
+                                what="(n_loc, n_loc) distance buffer")
 
 
 # ---------------------------------------------------------------------------
@@ -282,4 +290,5 @@ def test_knn_recall_tiled_matches_untiled():
     hlo = knn_lib._recall_hits.lower(
         jnp.zeros((1024, 7), jnp.int32), jnp.zeros((1024, 7), jnp.int32),
         128).as_text()
-    assert "1024x7x7" not in hlo, "full (N, K, K) match tensor"
+    hlo_checks.assert_no_buffer(hlo, (1024, 7, 7),
+                                what="full (N, K, K) match tensor")

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import hlo_checks
+
 from repro.configs.largevis_default import LargeVisConfig
 from repro.core import layout as layout_lib
 from repro.core import perplexity
@@ -207,9 +209,10 @@ def test_device_builders_lower_without_host_callbacks():
         )
     for lowered in lowereds:
         hlo = lowered.as_text()
-        assert "callback" not in hlo, "host callback in device builder"
-        assert "infeed" not in hlo
-        assert "cumsum" in hlo         # the prefix-sum device construction
+        hlo_checks.assert_no_op(hlo, "callback", "infeed",
+                                what="host involvement in device builder")
+        hlo_checks.assert_has_op(hlo, "cumsum",
+                                 what="prefix-sum device construction")
 
 
 def test_device_builders_never_run_python_vose(monkeypatch):
@@ -245,8 +248,9 @@ def test_symmetrize_is_single_compiled_computation():
     np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
 
     hlo = perplexity._symmetrize_scan.lower(idx, p, tile=64).as_text()
-    assert "while" in hlo, "tile loop not fused into the computation"
-    assert "callback" not in hlo
+    hlo_checks.assert_has_op(hlo, "while",
+                             what="tile loop fused into the computation")
+    hlo_checks.assert_no_op(hlo, "callback")
 
     # padded remainder tiles (200 % 64 != 0) match the exact-tile values
     w3 = perplexity.symmetrize(idx, p, tile=50)
