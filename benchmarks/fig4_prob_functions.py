@@ -21,13 +21,13 @@ def run(rows: Rows):
     base = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=2,
                           window=32, perplexity=12.0, samples_per_node=3000,
                           batch_size=4096)
-    idx, dist, w, _ = build_graph(x, KEY, base)
+    idx, dist, w, _ = build_graph(x, KEY, cfg=base)
     variants = [("inv_quadratic", 1.0), ("inv_quadratic", 4.0),
                 ("inv_quadratic", 9.0), ("exp_quadratic", 1.0)]
     import dataclasses
     for fn, a in variants:
         cfg = dataclasses.replace(base, prob_fn=fn, prob_a=a)
-        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg)
+        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg=cfg)
         acc = knn_classifier_accuracy(res.y, labels, k=5)
         label = f"{fn}_a{a:g}" if fn == "inv_quadratic" else fn
         rows.add(label, secs, accuracy=round(acc, 4))

@@ -26,9 +26,9 @@ def run(rows: Rows):
         cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=2,
                              window=32, perplexity=12.0,
                              samples_per_node=4000, batch_size=4096)
-        idx, dist, w, _ = build_graph(x, KEY, cfg)
+        idx, dist, w, _ = build_graph(x, KEY, cfg=cfg)
 
-        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg)
+        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg=cfg)
         acc = knn_classifier_accuracy(res.y, labels, k=5)
         rows.add(f"{ds}/largevis_default", secs, accuracy=round(acc, 4))
 

@@ -79,14 +79,14 @@ def run(rows: Rows, *, ns=(10_000, 100_000, 1_000_000),
     for n in ns:
         x, labels = dataset("blobs100", n, KEY)
         cfg = _cfg(n, total)
-        idx, dist, w, t_graph = build_graph(x, KEY, cfg)
+        idx, dist, w, t_graph = build_graph(x, KEY, cfg=cfg)
         jax.block_until_ready(w)
         # warmup=1 (timed default): the measured call excludes compile.
         # The gated metric derives from the stage-split layout_s, not the
         # whole-call secs — the one-time O(E) alias build (sampler_s,
         # recorded alongside) would otherwise smear into the per-sample
         # number exactly where it matters (large N, fixed total budget)
-        (res, t_stage), secs = timed(layout_graph, idx, w, KEY, cfg)
+        (res, t_stage), secs = timed(layout_graph, idx, w, KEY, cfg=cfg)
         layout_s = t_stage["layout_s"]
         derived = dict(
             samples_per_sec=round(res.edge_samples / max(layout_s, 1e-9)),
@@ -104,7 +104,7 @@ def run(rows: Rows, *, ns=(10_000, 100_000, 1_000_000),
     for n in tsne_ns:
         x, _ = dataset("blobs100", n, KEY)
         cfg = _cfg(n, total)
-        idx, dist, w, _ = build_graph(x, KEY, cfg)
+        idx, dist, w, _ = build_graph(x, KEY, cfg=cfg)
         (y, _), secs_t = timed(tsne_layout, idx, w, n_iter=100, key=KEY)
         rows.add(f"tsne_n{n}", secs_t, sec_per_iter=round(secs_t / 100, 5))
 

@@ -21,17 +21,17 @@ def run(rows: Rows):
     base = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=2,
                           window=32, perplexity=12.0, samples_per_node=3000,
                           batch_size=4096)
-    idx, dist, w, _ = build_graph(x, KEY, base)
+    idx, dist, w, _ = build_graph(x, KEY, cfg=base)
 
     for m in (1, 3, 5, 7):
         cfg = dataclasses.replace(base, n_negatives=m)
-        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg)
+        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg=cfg)
         acc = knn_classifier_accuracy(res.y, labels, k=5)
         rows.add(f"negatives_m{m}", secs, accuracy=round(acc, 4))
 
     for spn in (500, 1500, 3000, 6000):
         cfg = dataclasses.replace(base, samples_per_node=spn)
-        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg)
+        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg=cfg)
         acc = knn_classifier_accuracy(res.y, labels, k=5)
         rows.add(f"samples_t{spn}", secs, accuracy=round(acc, 4))
 

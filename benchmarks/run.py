@@ -21,6 +21,7 @@ TABLES = [
     ("table3_sampler_build", "benchmarks.table3_sampler_build"),
     ("fig6_scaling", "benchmarks.fig6_scaling"),
     ("fig7_sensitivity", "benchmarks.fig7_sensitivity"),
+    ("serve_latency", "benchmarks.serve_latency"),
 ]
 
 

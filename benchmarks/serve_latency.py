@@ -1,0 +1,108 @@
+"""Projection-serving latency: the continuous-batching engine under load.
+
+Drives ``launch/serve_projection.ProjectionEngine`` — the fixed-slot
+transform server — at 1k/10k/100k concurrent requests against a resident
+corpus and reports queries/sec plus p50/p99 end-to-end latency (submit ->
+retire, queue wait included).  The corpus is a synthetic fitted model
+(random points + random layout + uniform negative sampler): serving
+throughput measures the admit/lockstep/retire machinery and the fused
+frozen-corpus kernel, not layout quality, so a converged fit would only
+add minutes of fixture time without changing what the rows measure.
+
+Row contract:
+
+* ``queries_per_sec`` — total drain throughput (Q / wall seconds).
+* ``p50_ms`` / ``p99_ms`` — end-to-end request latency percentiles.  At
+  full concurrency most of p50 is queue wait (a request admitted in wave
+  w waits ~w * transform_steps engine steps), so this is the serving
+  number a capacity planner wants, not the per-step kernel time.
+
+``p50_ms`` of the ``serve_q1k`` row is the CI bench-smoke gate metric
+(benchmarks/check_regression.py, 2x factor).  ``--tiny`` runs exactly
+that row with the full-run config, so the committed baseline stays valid.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows
+from repro.configs.largevis_default import LargeVisConfig
+from repro.launch.serve_projection import ProjectionEngine, ProjectRequest
+
+KEY = jax.random.key(11)
+
+# per-row grid: concurrency -> (corpus N, slots).  d and the transform
+# config are shared; slots scale with load the way a deployment would.
+GRID = (
+    ("serve_q1k", 1_000, 4_000, 256),
+    ("serve_q10k", 10_000, 10_000, 1_024),
+    ("serve_q100k", 100_000, 10_000, 2_048),
+)
+DIM = 32
+CFG = LargeVisConfig(n_neighbors=10, transform_steps=16)
+
+
+def _synthetic_model(n: int, d: int, seed: int = 0):
+    """Fitted-carrier stand-in: corpus + frozen layout, uniform noise."""
+    kx, ky = jax.random.split(jax.random.key(seed))
+    return SimpleNamespace(
+        x=jax.random.normal(kx, (n, d), np.float32),
+        y=jax.random.normal(ky, (n, 2), np.float32),
+        neg_sampler=None,  # engine falls back to the uniform node sampler
+        cfg=None,
+    )
+
+
+def _serve_row(rows: Rows, name: str, *, q: int, n: int, slots: int):
+    model = _synthetic_model(n, DIM)
+    xq = np.asarray(jax.random.normal(KEY, (q, DIM)), np.float32)
+
+    # warmup engine at identical shapes: triggers both engine compiles
+    # (padded prefill block + lockstep step) so the timed drain below
+    # measures serving, not jit
+    warm = ProjectionEngine(model, slots=slots, cfg=CFG, seed=7)
+    warm.submit(ProjectRequest(rid=-1, x=xq[0]))
+    warm.run()
+
+    eng = ProjectionEngine(model, slots=slots, cfg=CFG, seed=7)
+    t0 = time.perf_counter()
+    for i in range(q):
+        eng.submit(ProjectRequest(rid=i, x=xq[i]))
+    n_steps = eng.run()
+    secs = time.perf_counter() - t0
+
+    assert len(eng.completed) == q, (len(eng.completed), q)
+    lat_ms = np.array([r.latency for r in eng.completed]) * 1e3
+    rows.add(name, secs,
+             queries=q, slots=slots, corpus_n=n, engine_steps=n_steps,
+             queries_per_sec=round(q / max(secs, 1e-9), 1),
+             p50_ms=round(float(np.percentile(lat_ms, 50)), 3),
+             p99_ms=round(float(np.percentile(lat_ms, 99)), 3))
+
+
+def run(rows: Rows):
+    for name, q, n, slots in GRID:
+        _serve_row(rows, name, q=q, n=n, slots=slots)
+
+
+def run_tiny(rows: Rows):
+    """CI bench-smoke mode: the serve_q1k row only, with the exact
+    full-run config, so the committed baseline stays valid."""
+    name, q, n, slots = GRID[0]
+    _serve_row(rows, name, q=q, n=n, slots=slots)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="serve_q1k row only (CI smoke mode)")
+    args = ap.parse_args()
+    rows = Rows("serve_latency")
+    (run_tiny if args.tiny else run)(rows)
+    rows.print_csv()
+    rows.save()

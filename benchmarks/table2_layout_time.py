@@ -113,8 +113,8 @@ def run(rows: Rows):
         cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=1,
                              window=32, perplexity=12.0,
                              samples_per_node=3000, batch_size=4096)
-        idx, dist, w, _ = build_graph(x, KEY, cfg)
-        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg)
+        idx, dist, w, _ = build_graph(x, KEY, cfg=cfg)
+        (res, _), secs = timed(layout_graph, idx, w, KEY, cfg=cfg)
         rows.add(f"largevis_n{n}", secs,
                  edge_samples=res.edge_samples,
                  samples_per_sec=round(res.edge_samples / max(secs, 1e-9)))

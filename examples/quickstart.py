@@ -30,7 +30,7 @@ def main():
         samples_per_node=4000,   # T / N
         batch_size=4096,
     )
-    result = largevis(x, key, cfg)
+    result = largevis(x, key, cfg=cfg)
 
     recall = graph_recall(x, result.knn_idx)
     acc = knn_classifier_accuracy(result.y, labels, k=5)

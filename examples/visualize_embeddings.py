@@ -31,7 +31,7 @@ def main():
     cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=2,
                          window=32, perplexity=10.0, samples_per_node=2000,
                          batch_size=4096)
-    result = largevis(jnp.asarray(table), jax.random.key(1), cfg)
+    result = largevis(jnp.asarray(table), jax.random.key(1), cfg=cfg)
     y = np.asarray(result.y)
     print(f"layout: {y.shape}, spread {y.std():.2f}")
     np.savez("/tmp/largevis_token_embeddings.npz", coords=y)

@@ -1,13 +1,16 @@
 """End-to-end driver (the paper's kind of workload): visualize an
-MNIST-shaped dataset — 784-dim images, 10 classes — at the largest size
-this container handles comfortably, with the full production feature set:
-checkpointed layout state, straggler watchdog, quality metrics.
+MNIST-shaped dataset — 784-dim images, 10 classes — through the
+``repro.LargeVis`` estimator, then project held-out points into the
+frozen layout with ``transform`` and grow the model with ``insert``.
 
     PYTHONPATH=src python examples/visualize_mnist.py [--n 20000]
 
-This is the 'train ~100M-model-equivalent' driver for a layout system: the
-trainable object is the (N x 2) coordinate table optimized for
-samples_per_node * N edge samples.
+The out-of-sample path is the online-serving story: ``transform`` places
+new points without moving a single fitted coordinate (the corpus stays
+bit-identical), and ``insert`` adopts them — KNN graph, edge weights and
+samplers updated incrementally — so the next fit-quality question can be
+asked of the grown model.  For the checkpointed / watchdogged production
+fit loop see ``launch/train.py``.
 """
 import argparse
 import time
@@ -15,73 +18,71 @@ import time
 import jax
 import numpy as np
 
-from repro.checkpoint.manager import CheckpointManager
-from repro.configs.largevis_default import LargeVisConfig
-from repro.core import sampler as S
-from repro.core.largevis import build_graph
-from repro.core.layout import run_layout
+from repro import LargeVis, LargeVisConfig
 from repro.core.metrics import graph_recall, knn_classifier_accuracy
 from repro.data.synthetic import mnist_like
-from repro.runtime.fault_tolerance import Watchdog
+
+
+def _held_out_accuracy(y_corpus, labels_corpus, y_query, labels_query, k=5):
+    """5-NN majority vote of projected queries against the corpus layout."""
+    d2 = ((np.asarray(y_query)[:, None, :]
+           - np.asarray(y_corpus)[None, :, :]) ** 2).sum(-1)
+    nn = np.argsort(d2, axis=1)[:, :k]
+    votes = np.asarray(labels_corpus)[nn]
+    pred = np.array([np.bincount(v).argmax() for v in votes])
+    return float((pred == np.asarray(labels_query)).mean())
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--n-held-out", type=int, default=1_000)
     ap.add_argument("--samples-per-node", type=int, default=3000)
-    ap.add_argument("--ckpt", default="/tmp/largevis_mnist_ckpt")
     args = ap.parse_args()
 
     key = jax.random.key(0)
-    x, labels = mnist_like(key, args.n, 784, 10)
-    print(f"dataset: {x.shape} (MNIST-shaped), 10 classes")
+    x, labels = mnist_like(key, args.n + args.n_held_out, 784, 10)
+    x_fit, labels_fit = x[:args.n], labels[:args.n]
+    x_new, labels_new = x[args.n:], labels[args.n:]
+    print(f"dataset: {x.shape} (MNIST-shaped), 10 classes "
+          f"({args.n} fit + {args.n_held_out} held out)")
 
-    cfg = LargeVisConfig(n_neighbors=50, n_trees=8, n_explore_iters=2,
-                         window=64, perplexity=30.0,
-                         samples_per_node=args.samples_per_node,
-                         batch_size=8192)
+    model = LargeVis(n_neighbors=50, n_trees=8, n_explore_iters=2,
+                     window=64, perplexity=30.0,
+                     samples_per_node=args.samples_per_node,
+                     batch_size=8192)
+
     t0 = time.time()
-    idx, dist, w, timings = build_graph(x, key, cfg)
-    print(f"graph built in {time.time()-t0:.1f}s "
-          f"(recall {graph_recall(x, idx):.3f})")
+    model.fit(x_fit, key)
+    r = model.result_
+    acc = knn_classifier_accuracy(r.y, labels_fit, k=5)
+    print(f"fit in {time.time()-t0:.1f}s "
+          f"(graph recall {graph_recall(x_fit, r.knn_idx):.3f}, "
+          f"2D KNN accuracy {acc:.3f}, chance 0.1)")
+    for stage, secs in r.timings.items():
+        print(f"  {stage}: {secs:.2f}s")
 
-    es = S.build_edge_sampler(idx, w)
-    ns = S.build_negative_sampler(idx, w)
-    mgr = CheckpointManager(args.ckpt, save_every=200)
-    dog = Watchdog()
-
-    state, start = mgr.resume()
-    y0 = state["y"] if state else None
-
-    # run_layout's scan-fused path: cfg.steps_per_dispatch steps per device
-    # dispatch (donated y buffer); on_chunk fires at every chunk boundary —
-    # the checkpoint / watchdog / progress tick.  Saves use a distance
-    # check, not step % save_every, so any steps_per_dispatch cadence works.
+    # -- out-of-sample projection: corpus coordinates stay bit-identical
+    y_before = np.asarray(r.y).copy()
     t0 = time.time()
-    prog = {"last": t0, "saved": start}
-    res_batch = min(cfg.batch_size, args.n // 2)    # the collision cap
+    y_new = model.transform(x_new)
+    acc_new = _held_out_accuracy(r.y, labels_fit, y_new, labels_new)
+    assert np.array_equal(np.asarray(r.y).view(np.uint32),
+                          y_before.view(np.uint32)), "corpus moved!"
+    print(f"transform: {len(x_new)} held-out points in {time.time()-t0:.1f}s "
+          f"(held-out 2D KNN accuracy {acc_new:.3f}; corpus frozen: bitwise)")
 
-    def on_chunk(t, steps, y):
-        now = time.time()
-        dog.observe(t, now - prog["last"])
-        prog["last"] = now
-        if t - prog["saved"] >= mgr.save_every or t >= steps:
-            mgr.save_now(t, {"y": y})
-            prog["saved"] = t
-        if t % max(1, (steps // 10)) < cfg.steps_per_dispatch:
-            rate = (t - start) * res_batch / max(now - t0, 1e-9)
-            print(f"  step {t}/{steps} ({rate:,.0f} edge samples/s)")
+    # -- incremental adoption: the model grows, nothing refits
+    t0 = time.time()
+    model.insert(x_new)
+    r = model.result_
+    print(f"insert: model grown to N={r.y.shape[0]} in {time.time()-t0:.1f}s "
+          f"(graph rows repaired incrementally, samplers rebuilt)")
 
-    res = run_layout(key, es, ns, args.n, cfg, y0=y0, start_step=start,
-                     on_chunk=on_chunk)
-    y = res.y
-    acc = knn_classifier_accuracy(y, labels, k=5)
-    print(f"layout done: {res.steps} steps, {res.edge_samples:,} edge "
-          f"samples, 2D KNN accuracy {acc:.3f} (chance 0.1)")
-    if dog.stragglers:
-        print(f"straggler steps flagged: {len(dog.stragglers)}")
-    np.savez("/tmp/largevis_mnist.npz", coords=np.asarray(y),
-             labels=np.asarray(labels))
+    y_all = np.asarray(r.y)
+    labels_all = np.concatenate([np.asarray(labels_fit),
+                                 np.asarray(labels_new)])
+    np.savez("/tmp/largevis_mnist.npz", coords=y_all, labels=labels_all)
     print("wrote /tmp/largevis_mnist.npz")
 
 

@@ -1,0 +1,23 @@
+"""repro: a JAX/Pallas reproduction of LargeVis (Tang et al., WWW 2016).
+
+Public API — see README "Public API":
+
+* :class:`LargeVis` — the estimator (``fit`` / ``transform`` /
+  ``fit_transform`` / ``insert``).
+* :func:`largevis` / :class:`LargeVisResult` — the functional core and
+  its fitted-model carrier (``repro.core.largevis``).
+* :class:`LargeVisConfig` / :class:`RoutingConfig` — hyper-parameters
+  and implementation routing (``repro.configs.largevis_default``).
+"""
+from repro.api import LargeVis, NotFittedError
+from repro.configs.largevis_default import LargeVisConfig, RoutingConfig
+from repro.core.largevis import LargeVisResult, largevis
+
+__all__ = [
+    "LargeVis",
+    "LargeVisConfig",
+    "LargeVisResult",
+    "NotFittedError",
+    "RoutingConfig",
+    "largevis",
+]

@@ -1,0 +1,143 @@
+"""The public estimator API: ``fit`` / ``transform`` / ``fit_transform`` /
+``insert`` over the LargeVis pipeline.
+
+    from repro import LargeVis
+
+    model = LargeVis(n_neighbors=50, samples_per_node=2000).fit(x)
+    coords = model.embedding_                    # (N, 2) fitted layout
+    y_new = model.transform(x_held_out)          # frozen-corpus projection
+    y_new = model.insert(x_more)                 # grow the model online
+
+:class:`LargeVis` wraps the functional core (``core.largevis.largevis``)
+without re-deriving anything: ``fit`` runs the identical pipeline with the
+identical key stream, so ``LargeVis(cfg=c).fit(x, key).embedding_`` is
+bitwise-equal to ``largevis(x, key, cfg=c).y`` (pinned in
+tests/test_api.py).  The fitted state is a single
+:class:`~repro.core.largevis.LargeVisResult` carrier at ``.result_`` —
+see its docstring for the frozen-field contract (``transform`` never
+mutates the carrier; ``insert`` appends rows and rewrites the graph but
+never moves fitted coordinates).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.largevis_default import LargeVisConfig
+from repro.core import perplexity as perp_lib
+from repro.core import sampler as sampler_lib
+from repro.core import transform as transform_lib
+from repro.core.largevis import LargeVisResult, largevis
+
+# domain separators for keys derived from the fit key when the caller
+# does not pass one (fold_in keeps streams disjoint from layout steps,
+# which fold small integers into per-chunk subkeys of the SPLIT key)
+_TRANSFORM_TAG = 0x7472_616E          # "tran"
+_INSERT_TAG = 0x696E_7372             # "insr"
+
+
+class NotFittedError(RuntimeError):
+    """``transform``/``insert`` called before ``fit``."""
+
+
+class LargeVis:
+    """LargeVis visualization estimator (paper: Tang et al., WWW 2016).
+
+    Parameters are the fields of :class:`LargeVisConfig`; pass a full
+    ``cfg=`` and/or individual fields as keyword overrides::
+
+        LargeVis(n_neighbors=15)
+        LargeVis(cfg=my_cfg, samples_per_node=500)
+
+    After ``fit``: ``embedding_`` is the (N, out_dim) layout and
+    ``result_`` the full fitted-model carrier.  The estimator object
+    pickles (model persistence round trip is pinned in tests).
+    """
+
+    def __init__(self, cfg: LargeVisConfig | None = None, **overrides):
+        if cfg is None:
+            cfg = LargeVisConfig(**overrides)
+        elif overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        self.cfg = cfg
+        self.result_: LargeVisResult | None = None
+
+    # -- fitting ---------------------------------------------------------
+
+    def fit(self, x, key=None, *, callback=None) -> "LargeVis":
+        """Run the two-stage pipeline on ``x`` (N, d); returns ``self``."""
+        self.result_ = largevis(x, key, cfg=self.cfg, callback=callback)
+        return self
+
+    def fit_transform(self, x, key=None, *, callback=None):
+        """``fit(x)`` and return the (N, out_dim) embedding."""
+        return self.fit(x, key, callback=callback).embedding_
+
+    @property
+    def embedding_(self):
+        return self._fitted().y
+
+    def _fitted(self) -> LargeVisResult:
+        if self.result_ is None:
+            raise NotFittedError(
+                "this LargeVis instance is not fitted yet; call fit() "
+                "or fit_transform() first")
+        return self.result_
+
+    # -- online operations ----------------------------------------------
+
+    def transform(self, x_new, key=None):
+        """Project queries into the FROZEN fitted layout -> (Q, out_dim).
+
+        The fitted model is read-only here: corpus coordinates enter the
+        projection's force computation but stay bit-identical, and the
+        carrier is not mutated.  See ``core.transform.project``.
+        """
+        r = self._fitted()
+        if key is None:
+            key = jax.random.fold_in(r.key, _TRANSFORM_TAG)
+        y_new, _ = transform_lib.project(
+            x_new, x=r.x, y=r.y, key=key, cfg=r.cfg or self.cfg,
+            neg_sampler=r.neg_sampler)
+        return y_new
+
+    def insert(self, x_new, key=None):
+        """Grow the fitted model by ``x_new`` -> their (Q, out_dim) coords.
+
+        Incremental, no refit: the KNN graph is updated through the
+        neighbor-exploring machinery (``core.transform.knn_insert``), the
+        new points are projected with the existing corpus frozen, edge
+        weights are re-calibrated on the updated graph, and the samplers
+        are rebuilt — after which the inserted points are full corpus
+        members for future ``transform``/``insert`` calls.  Existing
+        rows of ``embedding_`` do not move.
+        """
+        r = self._fitted()
+        cfg = r.cfg or self.cfg
+        if key is None:
+            key = jax.random.fold_in(r.key, _INSERT_TAG)
+        kp, kg = jax.random.split(key)
+        x_new = jnp.asarray(x_new, r.x.dtype)
+        if x_new.shape[0] == 0:
+            return jnp.zeros((0, r.y.shape[1]), r.y.dtype)
+        y_new, aux = transform_lib.project(
+            x_new, x=r.x, y=r.y, key=kp, cfg=cfg, neg_sampler=r.neg_sampler)
+        k = r.knn_idx.shape[1]
+        qc_idx, qc_dist = aux["nn_idx"], aux["nn_dist"]
+        if qc_idx.shape[1] != k:        # cfg.n_neighbors drifted from fit
+            qc_idx, qc_dist = None, None
+        x_all, idx_all, dist_all = transform_lib.knn_insert(
+            r.x, r.knn_idx, r.knn_dist, x_new, key=kg, cfg=cfg,
+            qc_idx=qc_idx, qc_dist=qc_dist)
+        w_all = perp_lib.edge_weights(idx_all, dist_all, cfg.perplexity,
+                                      iters=cfg.perplexity_iters)
+        r.x = x_all
+        r.y = jnp.concatenate([jnp.asarray(r.y, jnp.float32), y_new])
+        r.knn_idx, r.knn_dist, r.weights = idx_all, dist_all, w_all
+        r.edge_sampler = sampler_lib.build_edge_sampler(
+            idx_all, w_all, impl=cfg.sampler_impl)
+        r.neg_sampler = sampler_lib.build_negative_sampler(
+            idx_all, w_all, power=cfg.neg_power, impl=cfg.sampler_impl)
+        return y_new

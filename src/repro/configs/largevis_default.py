@@ -3,13 +3,90 @@
 These are the defaults the paper reports as *stable across datasets*:
 perplexity 50, K=150 neighbors, M=5 negatives, gamma=7, rho0=1.0,
 f(x) = 1/(1+x^2), T proportional to N.
+
+Implementation routing lives in one namespace, ``LargeVisConfig.routing``
+(:class:`RoutingConfig`) — which kernel/builder backs each stage.  The
+pre-PR-7 flat knobs (``knn_impl``, ``sampler_impl``, ``fused_step``,
+``knn_distributed``) keep working as deprecated aliases: passing one
+emits a ``DeprecationWarning`` and folds the value into ``routing``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import warnings
+from typing import Any, Optional
 
 import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingConfig:
+    """Implementation routing for every pipeline stage.
+
+    Every knob accepts ``"auto"``; the full resolution table:
+
+    ==============  ========================  ================================
+    knob            values                    ``"auto"`` resolves to
+    ==============  ========================  ================================
+    ``knn``         auto | fused|pallas|ref   streaming distance->top-k
+                                              (``kernels.ops.topk_sqdist``):
+                                              Pallas kernel on TPU, the
+                                              bit-identical streaming jnp
+                                              oracle elsewhere
+    ``sampler``     auto | device | host      alias-table builder at the
+                                              graph->layout boundary:
+                                              ``device`` (jitted prefix-sum
+                                              construction); ``host`` is the
+                                              numpy Vose oracle/debug path
+    ``layout_step`` auto | fused | split      SGD edge-step body: ``fused``
+                                              (one-pass gather+grad+scatter
+                                              kernel, in-place y) wherever
+                                              ``ops.fused_step_supported``;
+                                              ``split`` is the gather/grad/
+                                              scatter debug path (also taken
+                                              automatically for autodiff
+                                              prob_fns / VMEM-oversized y)
+    ``knn_stage``   auto | ring | forest      stage-1 KNN under
+                                              ``distributed=True``: ``ring``
+                                              = the sharded distance ring
+                                              (fixed memory, O(N^2 d/P)
+                                              compute); ``forest`` = the
+                                              paper's linear RP-forest +
+                                              neighbor-exploring build
+                                              (the fig6 scaling config)
+    ==============  ========================  ================================
+    """
+    knn: str = "auto"
+    sampler: str = "auto"
+    layout_step: str = "auto"
+    knn_stage: str = "auto"
+
+
+class _ResolvedStr(str):
+    """Marks a flat alias value that was derived from ``routing`` (not
+    user-passed), so ``dataclasses.replace(cfg, routing=...)`` round trips
+    know routing is authoritative and stay silent."""
+
+
+class _ResolvedFlag(int):
+    """Bool-valued counterpart of :class:`_ResolvedStr` (``bool`` is not
+    subclassable; an int subclass keeps truthiness, ``==`` and hashing)."""
+
+
+def _mark_resolved(v):
+    return _ResolvedStr(v) if isinstance(v, str) else _ResolvedFlag(v)
+
+
+# (deprecated flat field, routing key, routing-value -> flat-value,
+#  flat-value -> routing-value)
+_ALIASES = (
+    ("knn_impl", "knn", lambda v: v, lambda o: o),
+    ("sampler_impl", "sampler", lambda v: v, lambda o: o),
+    ("fused_step", "layout_step", lambda v: v != "split",
+     lambda o: "fused" if o else "split"),
+    ("knn_distributed", "knn_stage", lambda v: v != "forest",
+     lambda o: "ring" if o else "forest"),
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,24 +100,12 @@ class LargeVisConfig:
     window: int = 64                # sorted-window candidate half-width
     explore_sample: int = 0         # 0 -> auto (candidates per explore iter)
     rp_mode: str = "hash"           # "hash" (matmul, TPU-native) | "tree"
-    knn_impl: str = "auto"          # streaming distance->top-k routing
-    #   (kernels/ops.py::topk_sqdist): "fused"/"pallas" = the Pallas
-    #   kernel, "ref" = the streaming jnp oracle, "auto" = kernel on TPU
-    #   / oracle elsewhere (bit-identical at equal tiles)
     perplexity: float = 50.0        # u in Eqn (1)
     perplexity_iters: int = 64      # bisection steps for sigma_i
     # --- distributed pipeline (knn_sharded.py / perplexity.py /
     #     sampler.py sharded drivers + local-SGD layout) ---
     distributed: bool = False       # run every stage on the 1-D "data" mesh
     data_shards: int = 0            # devices in the 1-D mesh (0 = all)
-    knn_distributed: bool = True    # stage-1 routing under distributed=True:
-    #   True = the ring pass (core/knn_sharded.py) — fixed per-device
-    #   memory, but its masked distance fold costs O(N^2 d / P) FLOPs
-    #   per device (the bucket codes mask candidates, they don't skip
-    #   tiles), which wants a device count that scales with N;
-    #   False = the paper's linear RP-forest + neighbor-exploring KNN
-    #   (single-device compute, O(N) — the fig6 scaling configuration),
-    #   with calibration/symmetrization/samplers/layout still sharded
     # --- layout (paper §3.2) ---
     out_dim: int = 2                # s
     n_negatives: int = 5            # M
@@ -54,20 +119,54 @@ class LargeVisConfig:
     steps_per_dispatch: int = 100   # scan-fused steps per device dispatch
     #   (core/layout_engine.py); <=1 falls back to the per-step Python loop
     #   (debug / visual-progress mode — ~dispatch-bound at small N)
-    fused_step: bool = True         # fully-fused edge-step kernel
-    #   (kernels/largevis_step.py: gather+grad+scatter in one pass, y
-    #   updated in place); False = split gather/grad/scatter path (debug;
-    #   autodiff prob_fns and VMEM-oversized embeddings split automatically)
     sync_every: int = 1             # H: local-SGD sync period (1 = sync SGD)
-    sampler_impl: str = "auto"      # alias-table builder at the stage
-    #   boundary: "device" = jitted sort/prefix-sum construction, tables
-    #   built on device straight from the (possibly sharded) graph;
-    #   "host" = numpy Vose loop (the test oracle / debug path);
-    #   "auto" -> "device" (core/sampler.py)
     init_scale: float = 1e-4        # initial layout ~ N(0, init_scale)
     neg_power: float = 0.75         # P_n(j) ∝ d_j^0.75
+    # --- out-of-sample transform (core/transform.py) ---
+    transform_steps: int = 48       # frozen-corpus SGD steps per query batch
+    transform_rho0: float = 0.0     # initial transform lr (0 -> rho0)
+    # --- implementation routing (one namespace; see RoutingConfig) ---
+    routing: RoutingConfig = dataclasses.field(default_factory=RoutingConfig)
+    # Deprecated flat aliases (pre-PR-7 names).  Passing one warns and
+    # folds the value into ``routing``; after construction they always
+    # hold the concrete routing-derived values, so legacy readers (and
+    # ``dataclasses.replace`` round trips) keep working.
+    knn_impl: Optional[str] = None            # -> routing.knn
+    sampler_impl: Optional[str] = None        # -> routing.sampler
+    fused_step: Optional[bool] = None         # -> routing.layout_step
+    knn_distributed: Optional[bool] = None    # -> routing.knn_stage
     dtype: Any = jnp.float32
     seed: int = 0
+
+    def __post_init__(self):
+        routing = self.routing
+        if routing is None:
+            routing = RoutingConfig()
+        for flat, key, from_routing, to_routing in _ALIASES:
+            flat_val = getattr(self, flat)
+            if flat_val is None:
+                continue
+            if from_routing(getattr(routing, key)) == flat_val:
+                continue            # consistent (e.g. a replace() round trip)
+            if isinstance(flat_val, (_ResolvedStr, _ResolvedFlag)):
+                continue            # stale routing-derived value from a
+                #                     replace(cfg, routing=...) — routing wins
+            # an UNMARKED conflicting value was passed by the user in THIS
+            # construction (including dataclasses.replace(cfg, fused_step=..)
+            # on a config whose routing was folded earlier) — it wins, with
+            # the deprecation warning; routing wins silently only over its
+            # own stale derived values (the marked branch above)
+            warnings.warn(
+                f"LargeVisConfig({flat}=...) is deprecated; use "
+                f"routing=RoutingConfig({key}={to_routing(flat_val)!r})",
+                DeprecationWarning, stacklevel=3)
+            routing = dataclasses.replace(
+                routing, **{key: to_routing(flat_val)})
+        object.__setattr__(self, "routing", routing)
+        for flat, key, from_routing, _ in _ALIASES:
+            object.__setattr__(
+                self, flat,
+                _mark_resolved(from_routing(getattr(routing, key))))
 
 
 DEFAULT = LargeVisConfig()

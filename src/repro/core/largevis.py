@@ -1,8 +1,16 @@
 """LargeVis top-level API: data matrix in, 2D/3D layout out.
 
-    from repro.core.largevis import largevis
+    from repro import LargeVis                 # the estimator front door
+    model = LargeVis(n_neighbors=50).fit(x)
+    coords = model.embedding_                  # (N, 2)
+
+    from repro.core.largevis import largevis   # functional form
     result = largevis(x, key=jax.random.key(0))
     coords = result.y          # (N, 2)
+
+``largevis()`` is the functional core the :class:`repro.LargeVis`
+estimator wraps — both run the identical pipeline with the identical key
+stream, so their outputs are bitwise-equal (pinned in tests/test_api.py).
 
 Pipeline = the paper's two stages: (1) approximate KNN graph (projection
 forest + neighbor exploring + perplexity-calibrated weights), (2)
@@ -34,7 +42,7 @@ import time
 
 import jax
 
-from repro.configs.largevis_default import DEFAULT, LargeVisConfig
+from repro.configs.largevis_default import LargeVisConfig
 from repro.core import knn as knn_lib
 from repro.core import layout as layout_lib
 from repro.core import perplexity as perp_lib
@@ -43,12 +51,40 @@ from repro.core import sampler as sampler_lib
 
 @dataclasses.dataclass
 class LargeVisResult:
+    """Fitted-model carrier: everything the online operations need.
+
+    Field contract (what ``transform`` reads vs what ``insert`` rewrites):
+
+    * ``y``/``knn_idx``/``knn_dist``/``weights`` — the fitted embedding
+      and graph.  ``transform`` treats ALL of them as **frozen**: a
+      projection never mutates the carrier, and the corpus rows of the
+      concat embedding it optimizes are bit-identical to ``y`` (the
+      kernel's ``n_frozen`` masking — asserted in tests).  ``insert``
+      **rewrites** them: rows are appended and existing rows may adopt
+      new neighbors (graph + weights) — but never move in ``y``.
+    * ``x`` — the corpus points (needed by ``transform``/``insert`` for
+      query neighborhoods; ``None`` when built by the pre-PR-7 shim path
+      that never captured inputs).
+    * ``edge_sampler``/``neg_sampler`` — the alias-table pytrees from the
+      stage boundary; ``transform`` draws negatives from ``neg_sampler``;
+      ``insert`` rebuilds both.  ``None`` under ``distributed`` sharded
+      layouts (per-shard tables stay on their mesh).
+    * ``cfg``/``key`` — the exact config and top-level PRNG key of the
+      fit, so any stage can be re-derived; frozen forever.
+    * ``timings``/``edge_samples`` — diagnostics; ``insert`` leaves them
+      describing the original fit.
+    """
     y: jax.Array                 # (N, s) layout
     knn_idx: jax.Array           # (N, K)
     knn_dist: jax.Array          # (N, K) squared distances
     weights: jax.Array           # (N, K) symmetrized edge weights
     timings: dict
     edge_samples: int
+    x: jax.Array | None = None           # (N, d) corpus points
+    edge_sampler: object | None = None   # sampler.EdgeSampler pytree
+    neg_sampler: object | None = None    # sampler.NodeSampler pytree
+    cfg: LargeVisConfig | None = None
+    key: jax.Array | None = None         # top-level fit key (pre-split)
 
 
 def _data_mesh(cfg: LargeVisConfig):
@@ -57,8 +93,11 @@ def _data_mesh(cfg: LargeVisConfig):
     return make_data_mesh(cfg.data_shards)
 
 
-def build_graph(x, key, cfg: LargeVisConfig = DEFAULT):
+def build_graph(x, key, *, cfg: LargeVisConfig | None = None):
     """Stage 1: KNN graph + calibrated weights.
+
+    ``cfg`` is keyword-only as of PR 7 (``cfg=None`` means a fresh
+    default — never the shared ``DEFAULT`` singleton).
 
     With ``cfg.distributed`` every sub-stage runs on the same 1-D
     "data" mesh: the ring-streamed KNN build, then row-parallel
@@ -66,6 +105,7 @@ def build_graph(x, key, cfg: LargeVisConfig = DEFAULT):
     (`core/perplexity.py` sharded drivers) — the graph never leaves the
     mesh between KNN and weights, and the sharded weights are
     bitwise-equal to the single-device path."""
+    cfg = cfg if cfg is not None else LargeVisConfig()
     t0 = time.time()
     idx, dist = knn_lib.build_knn_graph(x, key, cfg)
     # block (no transfer) so knn_s/weights_s split the stages honestly —
@@ -84,9 +124,16 @@ def build_graph(x, key, cfg: LargeVisConfig = DEFAULT):
     return idx, dist, w, {"knn_s": t1 - t0, "weights_s": t2 - t1}
 
 
-def layout_graph(knn_idx, weights, key, cfg: LargeVisConfig = DEFAULT,
-                 callback=None):
+def layout_graph(knn_idx, weights, key, *, cfg: LargeVisConfig | None = None,
+                 callback=None, return_samplers: bool = False):
     """Stage 2: probabilistic layout of a weighted KNN graph.
+
+    ``cfg`` is keyword-only as of PR 7.  With ``return_samplers=True`` the
+    return value grows to ``(res, (edge_sampler, neg_sampler), timings)``
+    so fitted-model callers (``largevis()`` -> :class:`LargeVisResult`)
+    can carry the stage-boundary pytrees without rebuilding them;
+    sharded (``distributed``) samplers stay on their mesh and are
+    surfaced as ``None``.
 
     ``cfg.sampler_impl`` selects the alias-table builder at the stage
     boundary: ``"device"`` (what ``"auto"`` resolves to) builds the tables
@@ -103,6 +150,7 @@ def layout_graph(knn_idx, weights, key, cfg: LargeVisConfig = DEFAULT,
     driver with the edge tables left sharded — samplers stay
     device-resident pytrees end to end, exactly like the single-device
     boundary."""
+    cfg = cfg if cfg is not None else LargeVisConfig()
     t0 = time.time()
     if cfg.distributed:
         edge_s, neg_s = sampler_lib.build_samplers_sharded(
@@ -123,16 +171,30 @@ def layout_graph(knn_idx, weights, key, cfg: LargeVisConfig = DEFAULT,
         res = layout_lib.run_layout(key, edge_s, neg_s, knn_idx.shape[0],
                                     cfg, callback=callback)
     t2 = time.time()
-    return res, {"sampler_s": t1 - t0, "layout_s": t2 - t1}
+    timings = {"sampler_s": t1 - t0, "layout_s": t2 - t1}
+    if return_samplers:
+        samplers = (None, None) if cfg.distributed else (edge_s, neg_s)
+        return res, samplers, timings
+    return res, timings
 
 
-def largevis(x, key=None, cfg: LargeVisConfig = DEFAULT,
+def largevis(x, key=None, *, cfg: LargeVisConfig | None = None,
              callback=None) -> LargeVisResult:
+    """Run the full pipeline; the functional core of :class:`repro.LargeVis`.
+
+    ``cfg`` is keyword-only as of PR 7.  The result is a full fitted-model
+    carrier (corpus points, samplers, cfg, key), so ``repro.core.transform``
+    and the estimator's online operations can run against it directly.
+    """
+    cfg = cfg if cfg is not None else LargeVisConfig()
     if key is None:
         key = jax.random.key(cfg.seed)
     kg, kl = jax.random.split(key)
-    idx, dist, w, t_graph = build_graph(x, kg, cfg)
-    res, t_layout = layout_graph(idx, w, kl, cfg, callback=callback)
+    idx, dist, w, t_graph = build_graph(x, kg, cfg=cfg)
+    res, (edge_s, neg_s), t_layout = layout_graph(
+        idx, w, kl, cfg=cfg, callback=callback, return_samplers=True)
     return LargeVisResult(y=res.y, knn_idx=idx, knn_dist=dist, weights=w,
                           timings={**t_graph, **t_layout},
-                          edge_samples=res.edge_samples)
+                          edge_samples=res.edge_samples,
+                          x=jax.numpy.asarray(x), edge_sampler=edge_s,
+                          neg_sampler=neg_s, cfg=cfg, key=key)

@@ -53,6 +53,75 @@ STATIC_ARGNAMES = (
 )
 
 
+def apply_edge_batch(
+    y,
+    i,
+    j,
+    negs,
+    neg_mask,
+    lr,
+    *,
+    prob_fn: str = "inv_quadratic",
+    a: float = 1.0,
+    gamma: float = 7.0,
+    clip: float = 5.0,
+    fused_step: bool = True,
+    n_frozen: int = 0,
+):
+    """Apply one pre-sampled edge batch to the (N, s) embedding.
+
+    The update body shared by :func:`sgd_edge_step` (which samples the
+    batch from the alias samplers) and the out-of-sample transform /
+    serving paths (`core/transform.py`, which sample per-query neighbor
+    edges) — one definition of the fused/split routing and of the
+    canonical per-edge interleaved update order, so every consumer stays
+    bitwise-consistent with the fused kernel.
+
+    ``lr`` is a scalar or a (B,) per-edge vector; ``n_frozen`` masks
+    updates to rows below that index to -0.0 (a bitwise no-op add) — the
+    frozen-corpus transform mode.  ``fused_step`` routes through the
+    fully-fused edge-step kernel (``kernels/largevis_step.py``); the
+    split gather/grad/scatter path below remains for autodiff
+    ``prob_fn``s, embeddings past the kernel's TPU VMEM bound
+    (``ops.fused_step_supported``), and debugging; both paths apply
+    updates in the same canonical per-edge interleaved order, so their
+    trajectories match bitwise.
+    """
+    if (
+        fused_step
+        and prob_fn == "inv_quadratic"
+        and ops.fused_step_supported(y.shape[0], y.shape[1])
+    ):
+        return ops.largevis_edge_step(
+            y, i, j, negs, neg_mask, lr, gamma=gamma, a=a, clip=clip,
+            n_frozen=n_frozen
+        )
+
+    yi, yj, yneg = y[i], y[j], y[negs]
+    if prob_fn == "inv_quadratic":
+        gi, gj, gneg = ops.largevis_grads(
+            yi, yj, yneg, neg_mask, gamma=gamma, a=a, clip=clip
+        )
+    else:
+        gi, gj, gneg = objective.grads_autodiff(
+            yi, yj, yneg, neg_mask, prob_fn=prob_fn, a=a, gamma=gamma, clip=clip
+        )
+    # single fused scatter-add (3 separate .at[].add calls triple the
+    # y read/write traffic — §Perf hillclimb 3 iter 2), per-edge
+    # interleaved [i_e, j_e, negs_e] so the duplicate-accumulation order
+    # matches the fused kernel's sequential loop bitwise
+    s = y.shape[1]
+    idx = jnp.concatenate([i[:, None], j[:, None], negs], axis=1).reshape(-1)
+    upd = jnp.concatenate([gi[:, None], gj[:, None], gneg], axis=1).reshape(-1, s)
+    lr = jnp.asarray(lr, jnp.float32)
+    if lr.ndim:                        # (B,) per-edge -> per update row
+        lr = jnp.repeat(lr, 2 + negs.shape[1])[:, None]
+    upd = -lr * upd
+    if n_frozen:
+        upd = jnp.where((idx >= n_frozen)[:, None], upd, jnp.float32(-0.0))
+    return y.at[idx].add(upd)
+
+
 def sgd_edge_step(
     y,
     key,
@@ -97,33 +166,11 @@ def sgd_edge_step(
     # mask collisions: negative == source or target of the positive edge
     neg_mask = ((negs != i[:, None]) & (negs != j[:, None])).astype(jnp.float32)
     lr = rho0 * jnp.maximum(1.0 - t_frac, 1e-4)
-
-    if (
-        fused_step
-        and prob_fn == "inv_quadratic"
-        and ops.fused_step_supported(n_nodes, y.shape[1])
-    ):
-        return ops.largevis_edge_step(
-            y, i, j, negs, neg_mask, lr, gamma=gamma, a=a, clip=clip
-        )
-
-    yi, yj, yneg = y[i], y[j], y[negs]
-    if prob_fn == "inv_quadratic":
-        gi, gj, gneg = ops.largevis_grads(
-            yi, yj, yneg, neg_mask, gamma=gamma, a=a, clip=clip
-        )
-    else:
-        gi, gj, gneg = objective.grads_autodiff(
-            yi, yj, yneg, neg_mask, prob_fn=prob_fn, a=a, gamma=gamma, clip=clip
-        )
-    # single fused scatter-add (3 separate .at[].add calls triple the
-    # y read/write traffic — §Perf hillclimb 3 iter 2), per-edge
-    # interleaved [i_e, j_e, negs_e] so the duplicate-accumulation order
-    # matches the fused kernel's sequential loop bitwise
-    s = y.shape[1]
-    idx = jnp.concatenate([i[:, None], j[:, None], negs], axis=1).reshape(-1)
-    upd = jnp.concatenate([gi[:, None], gj[:, None], gneg], axis=1).reshape(-1, s)
-    return y.at[idx].add(-lr * upd)
+    del n_nodes  # == y.shape[0] in every driver; apply_edge_batch re-derives
+    return apply_edge_batch(
+        y, i, j, negs, neg_mask, lr,
+        prob_fn=prob_fn, a=a, gamma=gamma, clip=clip, fused_step=fused_step
+    )
 
 
 def scan_layout_steps(y, base_key, step_ids, t_fracs, **kw):

@@ -186,25 +186,67 @@ def _explore_round(x, knn_idx, knn_dist, ikey, *, sample: int, tile: int,
     return ti.reshape(-1, K)[:N], td.reshape(-1, K)[:N]
 
 
+@functools.partial(jax.jit, static_argnames=("sample", "tile", "r_cap"))
+def _explore_rows_round(x, knn_idx, knn_dist, rows, ikey, *, sample: int,
+                        tile: int, r_cap: int):
+    """One exploring iteration over a SUBSET of rows (incremental graph
+    maintenance after ``transform.knn_insert``): the same per-tile body as
+    ``_explore_round``, but only ``rows`` are explored and written back —
+    O(len(rows)) work against the full graph's reverse adjacency.  Rows
+    pad to a tile multiple by repeating the first row; padded results are
+    sliced off before the scatter."""
+    _, K = knn_idx.shape
+    R = rows.shape[0]
+    n_tiles = -(-R // tile)
+    rev = reverse_neighbors(knn_idx, r_cap)
+    rows_p = jnp.concatenate(
+        [rows, jnp.broadcast_to(rows[:1], (n_tiles * tile - R,))])
+    tkeys = jax.vmap(lambda t: jax.random.fold_in(ikey, t))(
+        jnp.arange(n_tiles))
+
+    def one(args):
+        r, tk = args
+        return _tile_explore(x, knn_idx, knn_dist, rev, r, tk, sample)
+
+    ti, td = jax.lax.map(one, (rows_p.reshape(n_tiles, tile), tkeys))
+    ti = ti.reshape(-1, K)[:R]
+    td = td.reshape(-1, K)[:R]
+    return knn_idx.at[rows].set(ti), knn_dist.at[rows].set(td)
+
+
 def neighbor_explore(x, knn_idx, knn_dist, *, iters: int = 1,
                      sample: int = 0, key=None, tile: int = 1024,
-                     r_cap: int = 0):
+                     r_cap: int = 0, rows=None):
     """Refine (knn_idx, knn_dist) for ``iters`` rounds.
 
     sample=0 explores the full candidate set (paper-faithful); tile bounds
     the (tile, K^2, d) gather — shrink it for large K/d.  Each iteration
     is one jitted dispatch (``_explore_round``); the graph feeds back
     between iterations.
+
+    ``rows`` (optional int32 array of row indices) restricts exploring to
+    those rows — the incremental-insert repair mode: candidate generation
+    still reads the FULL graph (forward and reverse), but only the given
+    rows are recomputed and written back.
     """
     if key is None:
         key = jax.random.key(0)
     N, K = knn_idx.shape
     r_cap = r_cap or K
+    n_rows = N if rows is None else int(rows.shape[0])
+    if n_rows == 0:
+        return knn_idx, knn_dist
     # keep the per-tile gather under ~256 MB f32
     budget = 64 * (1 << 20)
-    tile = max(16, min(tile, N, budget // max(1, (K * K + K) * x.shape[1])))
+    tile = max(16, min(tile, n_rows,
+                       budget // max(1, (K * K + K) * x.shape[1])))
     for it in range(iters):
-        knn_idx, knn_dist = _explore_round(
-            x, knn_idx, knn_dist, jax.random.fold_in(key, it),
-            sample=sample, tile=tile, r_cap=r_cap)
+        if rows is None:
+            knn_idx, knn_dist = _explore_round(
+                x, knn_idx, knn_dist, jax.random.fold_in(key, it),
+                sample=sample, tile=tile, r_cap=r_cap)
+        else:
+            knn_idx, knn_dist = _explore_rows_round(
+                x, knn_idx, knn_dist, rows, jax.random.fold_in(key, it),
+                sample=sample, tile=tile, r_cap=r_cap)
     return knn_idx, knn_dist

@@ -34,6 +34,14 @@ lowers to XLA ops, turning phase 1 into a fori-loop of row updates that
 beats XLA's general scatter-add by ~1.5x at N=20k — so ``ops`` routes
 ``impl="auto"`` to this kernel on every backend.
 
+``n_frozen=`` is the partial-update (out-of-sample transform) mode: rows
+below ``n_frozen`` are gathered and contribute forces but are never
+written — their phase-1 update is masked to -0.0, which is a bitwise
+no-op add for every f32 value — so a fitted corpus embedding stays
+BIT-identical while appended query rows optimize against it.  ``lr`` may
+be per-edge (B,) so lockstep serving slots at different schedule
+positions share one dispatch.
+
 ``gather=`` picks how phase 0 reads rows: ``"take"`` (default) gathers with
 one vectorized ``jnp.take`` per operand — fast everywhere interpret mode
 runs, and maps to Mosaic's dynamic-gather on current TPU toolchains;
@@ -54,7 +62,7 @@ from repro.kernels.largevis_grad import _resolve_interpret
 
 def _kernel(y_in, i_ref, j_ref, n_ref, mask_ref, lr_ref, y_ref, u_ref,
             g_ref=None, *, gamma: float, a: float, clip: float, eps: float,
-            tile: int, m: int, s: int, gather: str):
+            tile: int, m: int, s: int, gather: str, n_frozen: int):
     del y_in  # aliased with y_ref; all access goes through the output ref
     p = pl.program_id(0)
     t = pl.program_id(1)
@@ -101,25 +109,36 @@ def _kernel(y_in, i_ref, j_ref, n_ref, mask_ref, lr_ref, y_ref, u_ref,
         gj = jnp.clip(-gpos, -clip, clip)
         gn = jnp.clip(-gneg_i, -clip, clip)
         # stage -lr*g rows, per-edge interleaved: [u_i, u_j, u_n0..u_n{M-1}]
-        lr = lr_ref[0, 0]
+        # (lr enters as a (tile, 1) per-edge block — the layout drivers
+        # broadcast one scalar, the serving engine carries per-slot
+        # schedule positions; a broadcast scalar multiplies bitwise
+        # identically to the old scalar form)
+        lr = lr_ref[...]                                   # (tile, 1)
         u = jnp.concatenate([gi[:, None, :], gj[:, None, :], gn], axis=1)
-        u_ref[pl.ds(t * tile, tile), :] = (-lr * u).reshape(
+        u_ref[pl.ds(t * tile, tile), :] = (-lr[:, :, None] * u).reshape(
             tile, (2 + m) * s)
 
     @pl.when(p == 1)
     def _scatter():
         # sequential accumulate: duplicate indices (within an edge, across
-        # edges, across tiles) serialize in canonical per-edge order
+        # edges, across tiles) serialize in canonical per-edge order.
+        # Rows below n_frozen (the fitted corpus in transform mode) get
+        # their update masked to -0.0 — x + (-0.0) == x bitwise for every
+        # f32 including both signed zeros, so frozen rows never change.
+        neg_zero = jnp.float32(-0.0)
+
+        def _acc(rr, u_row):
+            if n_frozen:
+                u_row = jnp.where(rr >= n_frozen, u_row, neg_zero)
+            y_ref[rr, :] = y_ref[rr, :] + u_row
+
         def body(e, _):
             u = u_ref[t * tile + e, :].reshape(2 + m, s)
-            ii = i_ref[e, 0]
-            jj = j_ref[e, 0]
-            y_ref[ii, :] = y_ref[ii, :] + u[0]
-            y_ref[jj, :] = y_ref[jj, :] + u[1]
+            _acc(i_ref[e, 0], u[0])
+            _acc(j_ref[e, 0], u[1])
 
             def nbody(mm, _):
-                nn = n_ref[e, mm]
-                y_ref[nn, :] = y_ref[nn, :] + u[2 + mm]
+                _acc(n_ref[e, mm], u[2 + mm])
                 return 0
 
             jax.lax.fori_loop(0, m, nbody, 0)
@@ -129,17 +148,25 @@ def _kernel(y_in, i_ref, j_ref, n_ref, mask_ref, lr_ref, y_ref, u_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("gamma", "a", "clip", "eps",
-                                             "tile", "interpret", "gather"))
+                                             "tile", "interpret", "gather",
+                                             "n_frozen"))
 def fused_edge_step(y, i, j, negs, neg_mask, lr, *, gamma: float = 7.0,
                     a: float = 1.0, clip: float = 5.0, eps: float = 0.1,
                     tile: int = 1024, interpret: bool | None = None,
-                    gather: str = "take"):
+                    gather: str = "take", n_frozen: int = 0):
     """One in-place SGD update of ``y`` over a sampled edge batch.
 
     y: (N, s) f32; i/j: (B,) int32 edge endpoints; negs: (B, M) int32
     negative samples; neg_mask: (B, M) 1.0 valid / 0.0 collision;
-    lr: scalar learning rate.  Returns the updated (N, s) embedding
-    (same buffer — y is donated to the kernel via input_output_aliases).
+    lr: scalar learning rate, or a (B,) per-edge vector (the serving
+    engine's lockstep slots sit at different schedule positions — the
+    scalar form is the same computation broadcast).  Returns the updated
+    (N, s) embedding (same buffer — y is donated to the kernel via
+    input_output_aliases).
+
+    ``n_frozen``: rows with index < n_frozen are never written (their
+    phase-1 update is masked to -0.0, a bitwise no-op add) — the
+    out-of-sample transform mode: corpus rows frozen, query rows moving.
 
     Any B: the batch is zero-padded to a tile multiple; padded edges point
     at row 0 with i == j and masked negatives, so their gradient is exactly
@@ -152,15 +179,18 @@ def fused_edge_step(y, i, j, negs, neg_mask, lr, *, gamma: float = 7.0,
     M = negs.shape[1]
     t = min(tile, B)
     pad = (-B) % t
+    lr = jnp.broadcast_to(jnp.asarray(lr, jnp.float32), (B,))
     if pad:
         i = jnp.pad(i, (0, pad))
         j = jnp.pad(j, (0, pad))
         negs = jnp.pad(negs, ((0, pad), (0, 0)))
         neg_mask = jnp.pad(neg_mask, ((0, pad), (0, 0)))
+        lr = jnp.pad(lr, (0, pad))
     Bp = B + pad
     n_tiles = Bp // t
     kern = functools.partial(_kernel, gamma=gamma, a=a, clip=clip, eps=eps,
-                             tile=t, m=M, s=s, gather=gather)
+                             tile=t, m=M, s=s, gather=gather,
+                             n_frozen=n_frozen)
     return pl.pallas_call(
         kern,
         grid=(2, n_tiles),
@@ -170,7 +200,7 @@ def fused_edge_step(y, i, j, negs, neg_mask, lr, *, gamma: float = 7.0,
             pl.BlockSpec((t, 1), lambda p, tt: (tt, 0)),
             pl.BlockSpec((t, M), lambda p, tt: (tt, 0)),
             pl.BlockSpec((t, M), lambda p, tt: (tt, 0)),
-            pl.BlockSpec((1, 1), lambda p, tt: (0, 0)),
+            pl.BlockSpec((t, 1), lambda p, tt: (tt, 0)),
         ],
         out_specs=pl.BlockSpec((N, s), lambda p, tt: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((N, s), jnp.float32),
@@ -185,5 +215,4 @@ def fused_edge_step(y, i, j, negs, neg_mask, lr, *, gamma: float = 7.0,
         interpret=interpret,
     )(y.astype(jnp.float32), i.reshape(-1, 1).astype(jnp.int32),
       j.reshape(-1, 1).astype(jnp.int32), negs.astype(jnp.int32),
-      neg_mask.astype(jnp.float32),
-      jnp.asarray(lr, jnp.float32).reshape(1, 1))
+      neg_mask.astype(jnp.float32), lr.reshape(-1, 1))

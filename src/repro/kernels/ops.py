@@ -101,8 +101,15 @@ def largevis_grads(yi, yj, yneg, neg_mask, *, gamma=7.0, a=1.0, clip=5.0,
 
 
 def largevis_edge_step(y, i, j, negs, neg_mask, lr, *, gamma=7.0, a=1.0,
-                       clip=5.0, eps=0.1, impl: str = "auto", **kw):
+                       clip=5.0, eps=0.1, impl: str = "auto",
+                       n_frozen: int = 0, **kw):
     """One fused in-place SGD edge-step update of the (N, s) embedding.
+
+    ``n_frozen`` freezes rows below that index (their updates are masked
+    to -0.0 — a bitwise no-op add): the out-of-sample transform /
+    serving mode, where the fitted corpus embedding must stay
+    bit-identical while appended query rows move.  ``lr`` may be a
+    scalar or a (B,) per-edge vector (heterogeneous serving slots).
 
     impl:
       "fused" | "pallas" — the fully-fused Pallas kernel
@@ -122,10 +129,12 @@ def largevis_edge_step(y, i, j, negs, neg_mask, lr, *, gamma=7.0, a=1.0,
     """
     if impl in ("auto", "fused", "pallas"):
         return _lvstep_pallas(y, i, j, negs, neg_mask, lr, gamma=gamma,
-                              a=a, clip=clip, eps=eps, **kw)
+                              a=a, clip=clip, eps=eps, n_frozen=n_frozen,
+                              **kw)
     if impl == "ref":
         return ref.fused_edge_step_ref(y, i, j, negs, neg_mask, lr,
-                                       gamma=gamma, a=a, clip=clip, eps=eps)
+                                       gamma=gamma, a=a, clip=clip, eps=eps,
+                                       n_frozen=n_frozen)
     raise ValueError(f"unknown impl {impl!r}; "
                      "expected fused|pallas|ref|auto")
 

@@ -275,7 +275,7 @@ def largevis_grads_ref(yi, yj, yneg, *, gamma: float = 7.0, a: float = 1.0,
 
 def fused_edge_step_ref(y, i, j, negs, neg_mask, lr, *, gamma: float = 7.0,
                         a: float = 1.0, clip: float = 5.0,
-                        eps: float = 0.1):
+                        eps: float = 0.1, n_frozen: int = 0):
     """Pure-jnp oracle for ``largevis_step.fused_edge_step``.
 
     One SGD update of the (N, s) embedding over a sampled edge batch:
@@ -289,6 +289,16 @@ def fused_edge_step_ref(y, i, j, negs, neg_mask, lr, *, gamma: float = 7.0,
     applies duplicate updates in stream order, which is exactly the order
     the fused kernel's sequential phase-1 loop uses — the kernel is
     bit-reproducible against this oracle (asserted by tests).
+
+    ``lr`` may be a scalar (the layout drivers) or a (B,) per-edge vector
+    (the serving engine, whose lockstep slots sit at different schedule
+    positions); a scalar is the same computation as the broadcast vector.
+
+    ``n_frozen``: rows with index < n_frozen never change — the
+    out-of-sample transform mode, where the fitted corpus embedding is
+    frozen and only appended query rows move.  Frozen-row updates are
+    masked to -0.0, and x + (-0.0) == x bitwise for every f32 (including
+    both zeros), so frozen rows are BIT-identical to their inputs.
     """
     f32 = jnp.float32
     y = y.astype(f32)
@@ -300,7 +310,12 @@ def fused_edge_step_ref(y, i, j, negs, neg_mask, lr, *, gamma: float = 7.0,
     upd = jnp.concatenate([gi[:, None], gj[:, None], gneg],
                           axis=1).reshape(-1, s)
     lr = jnp.asarray(lr, f32)
-    return y.at[idx].add(-lr * upd)
+    if lr.ndim:                       # (B,) per-edge -> per update row
+        lr = jnp.repeat(lr, 2 + negs.shape[1])[:, None]
+    upd = -lr * upd
+    if n_frozen:
+        upd = jnp.where((idx >= n_frozen)[:, None], upd, f32(-0.0))
+    return y.at[idx].add(upd)
 
 
 # ---------------------------------------------------------------------------

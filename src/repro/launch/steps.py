@@ -325,6 +325,53 @@ def make_largevis_step_sharded(mesh, *, n_nodes: int, n_edges: int,
     return step, arg_specs, in_sh, rep
 
 
+def make_largevis_transform_step(mesh, *, n_corpus: int, n_slots: int,
+                                 k: int, out_dim: int = 2,
+                                 n_negatives: int = 5, steps: int = 48,
+                                 rho0: float = 1.0):
+    """The projection server's lockstep "decode" as a launch-harness cell.
+
+    One step of the continuous-batching projection engine
+    (``launch/serve_projection.py``): every serving slot draws one
+    positive edge from its own calibrated neighbor distribution plus M
+    noise negatives and takes a fused edge step at its OWN schedule
+    position (the kernel's per-edge (B,) lr mode), with the corpus rows
+    of the resident ``[corpus; slots]`` embedding frozen via
+    ``n_frozen`` masking.  Same 4-tuple contract as the LM builders;
+    everything replicates (the working set is (N+S) x s f32 — tiny).
+
+    Wire format: y_full (N+S, s), seed (1,), p_log (S, k), nn_idx
+    (S, k), ages (S,) i32, active (S,) i32, neg_thr (N,), neg_alias (N,).
+    """
+    from repro.core.layout_engine import apply_edge_batch
+    from repro.core.sampler import NodeSampler
+    from repro.core.transform import sample_query_edges
+
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    def step(y_full, seed, p_log, nn_idx, ages, active, neg_thr, neg_alias):
+        ns = NodeSampler(neg_thr, neg_alias, n_corpus)
+        key = jax.random.key(seed[0])
+        i = n_corpus + jnp.arange(n_slots, dtype=i32)
+        j, negs, neg_mask = sample_query_edges(
+            key, p_log, nn_idx, ns, n_negatives)
+        act = active.astype(bool)
+        j = jnp.where(act, j, i)
+        neg_mask = neg_mask * active.astype(f32)[:, None]
+        lr = rho0 * jnp.maximum(1.0 - ages.astype(f32) / steps, 1e-4)
+        return apply_edge_batch(y_full, i, j, negs, neg_mask, lr,
+                                n_frozen=n_corpus)
+
+    rep = NamedSharding(mesh, P())
+    arg_specs = (sds((n_corpus + n_slots, out_dim), f32), sds((1,), i32),
+                 sds((n_slots, k), f32), sds((n_slots, k), i32),
+                 sds((n_slots,), i32), sds((n_slots,), i32),
+                 sds((n_corpus,), f32), sds((n_corpus,), i32))
+    in_sh = (rep,) * len(arg_specs)
+    return step, arg_specs, in_sh, rep
+
+
 def make_largevis_step(mesh, *, n_nodes: int, n_edges: int, batch: int,
                        out_dim: int = 2, n_negatives: int = 5):
     """Sharded layout step: edge batch over DP axes, embedding table

@@ -1,0 +1,203 @@
+"""Public API surface: the ``repro.LargeVis`` estimator, the ``largevis()``
+compat shim, config routing consolidation, and model persistence."""
+import dataclasses
+import pickle
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import (
+    LargeVis,
+    LargeVisConfig,
+    LargeVisResult,
+    NotFittedError,
+    RoutingConfig,
+    largevis,
+)
+from repro.data.synthetic import mnist_like
+
+KEY = jax.random.key(0)
+
+CFG = LargeVisConfig(n_neighbors=10, n_trees=4, samples_per_node=150,
+                     batch_size=128, perplexity=8.0)
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, labels = mnist_like(KEY, 300, 16, 5)
+    return x, labels
+
+
+@pytest.fixture(scope="module")
+def fitted(data):
+    x, _ = data
+    return LargeVis(cfg=CFG).fit(x, jax.random.key(1))
+
+
+def test_public_import_paths():
+    """The README-documented names all import from the package root."""
+    import repro
+    for name in ("LargeVis", "LargeVisConfig", "LargeVisResult",
+                 "RoutingConfig", "largevis", "NotFittedError"):
+        assert hasattr(repro, name), name
+    assert repro.LargeVis is LargeVis
+
+
+def test_estimator_matches_largevis_bitwise(data, fitted):
+    """fit() is the functional pipeline verbatim: same key stream, same
+    bits."""
+    x, _ = data
+    ref = largevis(x, jax.random.key(1), cfg=CFG)
+    got = np.asarray(fitted.embedding_, np.float32)
+    want = np.asarray(ref.y, np.float32)
+    assert np.array_equal(got.view(np.uint32), want.view(np.uint32))
+
+
+def test_result_is_fitted_model_carrier(fitted):
+    r = fitted.result_
+    assert isinstance(r, LargeVisResult)
+    assert r.x is not None and r.x.shape[0] == r.y.shape[0]
+    assert r.edge_sampler is not None and r.neg_sampler is not None
+    assert r.cfg == CFG
+    assert r.key is not None
+
+
+def test_not_fitted_error():
+    with pytest.raises(NotFittedError):
+        LargeVis().transform(np.zeros((2, 4), np.float32))
+    with pytest.raises(NotFittedError):
+        _ = LargeVis().embedding_
+
+
+def test_estimator_pickle_round_trip(data, fitted):
+    """Model persistence: the estimator pickles whole and transforms
+    identically after the round trip."""
+    x, _ = data
+    m2 = pickle.loads(pickle.dumps(fitted))
+    assert np.array_equal(np.asarray(m2.embedding_),
+                          np.asarray(fitted.embedding_))
+    q = x[:5]
+    assert np.array_equal(np.asarray(m2.transform(q)),
+                          np.asarray(fitted.transform(q)))
+
+
+def test_result_pickle_round_trip(fitted):
+    r2 = pickle.loads(pickle.dumps(fitted.result_))
+    assert np.array_equal(np.asarray(r2.y), np.asarray(fitted.result_.y))
+    assert np.array_equal(np.asarray(r2.knn_idx),
+                          np.asarray(fitted.result_.knn_idx))
+    assert r2.cfg == fitted.result_.cfg
+
+
+def test_cfg_keyword_only(data):
+    """Config-like kwargs are keyword-only as of PR 7."""
+    x, _ = data
+    with pytest.raises(TypeError):
+        largevis(x, KEY, CFG)
+    from repro.core.largevis import build_graph, layout_graph
+    with pytest.raises(TypeError):
+        build_graph(x, KEY, CFG)
+    with pytest.raises(TypeError):
+        layout_graph(np.zeros((4, 2), np.int32), np.ones((4, 2)), KEY, CFG)
+
+
+def test_cfg_none_is_fresh_not_singleton():
+    """cfg=None constructs a fresh config — the mutable-singleton default
+    (cfg: LargeVisConfig = DEFAULT) is gone from every entry point."""
+    import importlib
+    import inspect
+
+    lv = importlib.import_module("repro.core.largevis")
+    for fn in (lv.largevis, lv.build_graph, lv.layout_graph):
+        sig = inspect.signature(fn)
+        assert sig.parameters["cfg"].default is None, fn.__name__
+
+
+# ---------------------------------------------------------------------------
+# Routing consolidation + deprecated aliases
+# ---------------------------------------------------------------------------
+
+def test_routing_namespace_defaults():
+    cfg = LargeVisConfig()
+    assert cfg.routing == RoutingConfig()
+    assert cfg.routing.knn == "auto"
+    assert cfg.routing.sampler == "auto"
+    assert cfg.routing.layout_step == "auto"
+    assert cfg.routing.knn_stage == "auto"
+
+
+def test_deprecated_knobs_warn_and_fold():
+    """Old flat names keep working: DeprecationWarning + routing fold."""
+    with pytest.warns(DeprecationWarning, match="fused_step"):
+        cfg = LargeVisConfig(fused_step=False)
+    assert cfg.routing.layout_step == "split"
+    assert not cfg.fused_step
+
+    with pytest.warns(DeprecationWarning, match="knn_distributed"):
+        cfg = LargeVisConfig(knn_distributed=False)
+    assert cfg.routing.knn_stage == "forest"
+
+    with pytest.warns(DeprecationWarning, match="sampler_impl"):
+        cfg = LargeVisConfig(sampler_impl="host")
+    assert cfg.routing.sampler == "host"
+
+    with pytest.warns(DeprecationWarning, match="knn_impl"):
+        cfg = LargeVisConfig(knn_impl="ref")
+    assert cfg.routing.knn == "ref"
+
+
+def test_resolved_flat_values_readable():
+    """After construction the flat aliases hold concrete routing-derived
+    values, so legacy readers (cfg.fused_step in the layout drivers etc.)
+    keep working without warnings."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        cfg = LargeVisConfig(routing=RoutingConfig(layout_step="split",
+                                                   sampler="host"))
+        assert cfg.fused_step is not None and not cfg.fused_step
+        assert cfg.sampler_impl == "host"
+        assert cfg.knn_impl == "auto"
+        assert cfg.knn_distributed
+
+
+def test_replace_round_trips_stay_silent():
+    """dataclasses.replace must not re-warn (the resolved flat values are
+    marked, so they are recognized as routing-derived, not user-passed)."""
+    with pytest.warns(DeprecationWarning):
+        cfg = LargeVisConfig(fused_step=False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        cfg2 = dataclasses.replace(cfg, n_neighbors=7)
+        assert cfg2.routing.layout_step == "split" and not cfg2.fused_step
+        # replacing routing outright: routing wins over the stale alias
+        cfg3 = dataclasses.replace(cfg, routing=RoutingConfig())
+        assert cfg3.fused_step
+
+
+def test_replace_flat_knob_overrides_stale_routing():
+    """replace(cfg, fused_step=False) on a config whose routing already
+    folded to 'fused' must flip to split — the fresh (unmarked) user value
+    beats the stale routing, with the warning.  Routing wins silently only
+    over its own marked derived values, never over new user input."""
+    cfg_f = LargeVisConfig(routing=RoutingConfig(layout_step="fused"))
+    with pytest.warns(DeprecationWarning):
+        cfg_s = dataclasses.replace(cfg_f, fused_step=False)
+    assert cfg_s.routing.layout_step == "split"
+    assert not cfg_s.fused_step
+    # a deprecated knob whose value AGREES with the routing resolution is
+    # consistent: no warning, no fold (auto resolves to fused here)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert LargeVisConfig(fused_step=True).routing.layout_step == "auto"
+
+
+def test_deprecated_split_step_still_runs(data):
+    """The old knob spelled through the new machinery still routes the
+    pipeline (split-step layout here) end to end."""
+    x, _ = data
+    with pytest.warns(DeprecationWarning):
+        cfg = dataclasses.replace(CFG, fused_step=False)
+    res = largevis(x[:120], jax.random.key(2), cfg=cfg)
+    assert np.isfinite(np.asarray(res.y)).all()

@@ -205,7 +205,7 @@ def test_layout_separates_clusters(blobs):
     cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=2,
                          window=32, perplexity=10.0, samples_per_node=2000,
                          batch_size=4096)
-    res = largevis(x, KEY, cfg)
+    res = largevis(x, KEY, cfg=cfg)
     acc = metrics.knn_classifier_accuracy(res.y, labels, k=5)
     assert acc > 0.8, acc                                 # chance = 0.125
     assert jnp.isfinite(res.y).all()

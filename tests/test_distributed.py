@@ -69,7 +69,7 @@ x, labels = gaussian_mixture(jax.random.key(1), 1500, 24, 6)
 lv = LargeVisConfig(n_neighbors=12, n_trees=4, n_explore_iters=2, window=32,
                     perplexity=8.0, samples_per_node=1500, batch_size=1024,
                     sync_every=8)
-idx, dist, w, _ = build_graph(x, jax.random.key(2), lv)
+idx, dist, w, _ = build_graph(x, jax.random.key(2), cfg=lv)
 es = S.build_edge_sampler(idx, w)
 ns = S.build_negative_sampler(idx, w)
 mesh4 = jax.make_mesh((4,), ("data",))

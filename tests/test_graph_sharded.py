@@ -249,10 +249,10 @@ def test_distributed_pipeline_device_resident(monkeypatch):
                          window=16, perplexity=5.0, samples_per_node=40,
                          batch_size=64, sync_every=4, distributed=True)
     with jax.transfer_guard_device_to_host("disallow"):
-        idx, dist, w, _ = build_graph(x, jax.random.key(5), cfg)
+        idx, dist, w, _ = build_graph(x, jax.random.key(5), cfg=cfg)
         es, ns = S.build_samplers_sharded(idx, w, power=cfg.neg_power)
         jax.block_until_ready((es.threshold, ns.threshold))
-    res = largevis(x, jax.random.key(6), cfg)
+    res = largevis(x, jax.random.key(6), cfg=cfg)
     assert res.y.shape == (403, cfg.out_dim)
     assert bool(jnp.all(jnp.isfinite(res.y)))
 
@@ -271,10 +271,10 @@ def test_distributed_linear_knn_routing():
                          batch_size=64, sync_every=4, distributed=True,
                          knn_distributed=False)
     with jax.transfer_guard_device_to_host("disallow"):
-        idx, dist, w, _ = build_graph(x, jax.random.key(5), cfg)
+        idx, dist, w, _ = build_graph(x, jax.random.key(5), cfg=cfg)
         jax.block_until_ready(w)
     cfg_flat = dataclasses.replace(cfg, distributed=False)
-    idx_f, dist_f, w_f, _ = build_graph(x, jax.random.key(5), cfg_flat)
+    idx_f, dist_f, w_f, _ = build_graph(x, jax.random.key(5), cfg=cfg_flat)
     assert np.array_equal(np.asarray(idx), np.asarray(idx_f))
     assert np.array_equal(np.asarray(dist), np.asarray(dist_f))
     assert np.array_equal(np.asarray(w), np.asarray(w_f))
@@ -347,7 +347,7 @@ x, _ = gaussian_mixture(jax.random.key(1), 1603, 12, 4)
 cfg = LargeVisConfig(n_neighbors=7, n_trees=2, n_explore_iters=1,
                      window=16, perplexity=5.0, samples_per_node=60,
                      batch_size=64, sync_every=4, distributed=True)
-res = largevis(x, jax.random.key(2), cfg)
+res = largevis(x, jax.random.key(2), cfg=cfg)
 assert res.y.shape == (1603, 2)
 assert bool(jnp.all(jnp.isfinite(res.y)))
 print("E2E_OK")

@@ -120,7 +120,7 @@ def test_engine_layout_quality():
                          window=32, perplexity=10.0, samples_per_node=2000,
                          batch_size=4096)
     assert cfg.steps_per_dispatch > 1   # default path = scan engine
-    res = largevis(x, KEY, cfg)
+    res = largevis(x, KEY, cfg=cfg)
     acc = metrics.knn_classifier_accuracy(res.y, labels, k=5)
     assert acc >= 0.95, acc
     assert jnp.isfinite(res.y).all()

@@ -378,10 +378,10 @@ def test_largevis_end_to_end_bitwise_vs_host_table_path():
     cfg = LargeVisConfig(n_neighbors=10, n_trees=4, n_explore_iters=1,
                          window=32, perplexity=8.0, samples_per_node=100,
                          batch_size=4096, sampler_impl="host")
-    got = largevis(x, KEY, cfg).y
+    got = largevis(x, KEY, cfg=cfg).y
 
     kg, kl = jax.random.split(KEY)
-    idx, dist, w, _ = build_graph(x, kg, cfg)
+    idx, dist, w, _ = build_graph(x, kg, cfg=cfg)
     es = S.build_edge_sampler(idx, w, impl="host")
     ns = S.build_negative_sampler(idx, w, power=cfg.neg_power, impl="host")
     want = _reference_run_layout(kl, es, ns, x.shape[0], cfg)
@@ -396,8 +396,8 @@ def test_largevis_device_tables_deterministic_and_finite():
     cfg = LargeVisConfig(n_neighbors=8, n_trees=4, n_explore_iters=1,
                          window=32, perplexity=6.0, samples_per_node=60,
                          batch_size=2048, sampler_impl="device")
-    r1 = largevis(x, KEY, cfg)
-    r2 = largevis(x, KEY, cfg)
+    r1 = largevis(x, KEY, cfg=cfg)
+    r2 = largevis(x, KEY, cfg=cfg)
     assert np.array_equal(np.asarray(r1.y), np.asarray(r2.y))
     assert jnp.isfinite(r1.y).all()
     assert "sampler_s" in r1.timings and "layout_s" in r1.timings

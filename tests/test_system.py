@@ -20,7 +20,7 @@ def test_largevis_end_to_end_quality():
     cfg = LargeVisConfig(n_neighbors=15, n_trees=4, n_explore_iters=2,
                          window=32, perplexity=12.0, samples_per_node=3000,
                          batch_size=4096)
-    res = largevis(x, KEY, cfg)
+    res = largevis(x, KEY, cfg=cfg)
     assert jnp.isfinite(res.y).all()
     assert graph_recall(x, res.knn_idx) > 0.85
     acc = knn_classifier_accuracy(res.y, labels, k=5)
@@ -34,7 +34,7 @@ def test_largevis_high_dim_input():
     cfg = LargeVisConfig(n_neighbors=10, n_trees=4, n_explore_iters=2,
                          window=32, perplexity=8.0, samples_per_node=4000,
                          batch_size=4096)
-    res = largevis(x, KEY, cfg)
+    res = largevis(x, KEY, cfg=cfg)
     acc = knn_classifier_accuracy(res.y, labels, k=5)
     assert acc > 0.8, acc
 
@@ -72,6 +72,6 @@ def test_largevis_deterministic_given_key():
     cfg = LargeVisConfig(n_neighbors=8, n_trees=2, n_explore_iters=1,
                          window=16, perplexity=5.0, samples_per_node=200,
                          batch_size=1024)
-    y1 = largevis(x, jax.random.key(7), cfg).y
-    y2 = largevis(x, jax.random.key(7), cfg).y
+    y1 = largevis(x, jax.random.key(7), cfg=cfg).y
+    y2 = largevis(x, jax.random.key(7), cfg=cfg).y
     np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
