@@ -34,6 +34,22 @@ def dataset(name: str, n: int, key=None):
     raise KeyError(name)
 
 
+def _report_stragglers(watchdog, label: str):
+    """One stderr line when timed repeats hit load-spike outliers.
+
+    best-of timing already discards stragglers from the *numbers*; the
+    report makes the discard visible so a row measured during a load
+    spike is never mistaken for a clean one."""
+    if watchdog is not None and watchdog.stragglers:
+        import sys
+        worst = max(dt for _, dt, _ in watchdog.stragglers)
+        med = watchdog.stragglers[-1][2]
+        print(f"[bench] {label}: {len(watchdog.stragglers)} straggler "
+              f"repeat(s) (worst {worst:.3f}s vs median {med:.3f}s) — "
+              f"using best-of, but treat this row with suspicion",
+              file=sys.stderr)
+
+
 def best_of_interleaved(fns, repeats: int):
     """Best-of-``repeats`` per fn, *alternating* fns every round.
 
@@ -43,15 +59,23 @@ def best_of_interleaved(fns, repeats: int):
     ratios meaningless.  Interleaving spreads every config across the
     same load windows, so the per-config minima are comparable.  Each fn
     gets one untimed warmup call first (compile time never lands in a
-    number).  Returns (outs, best_seconds), one entry per fn.
+    number).  A per-fn :class:`~repro.runtime.fault_tolerance.Watchdog`
+    flags outlier repeats (load spikes) on stderr.  Returns
+    (outs, best_seconds), one entry per fn.
     """
+    from repro.runtime.fault_tolerance import Watchdog
     outs = [jax.block_until_ready(f()) for f in fns]   # warmup / compile
     best = [float("inf")] * len(fns)
-    for _ in range(repeats):
+    dogs = [Watchdog() for _ in fns]
+    for r in range(repeats):
         for f_i, f in enumerate(fns):
             t0 = time.time()
             outs[f_i] = jax.block_until_ready(f())
-            best[f_i] = min(best[f_i], time.time() - t0)
+            dt = time.time() - t0
+            best[f_i] = min(best[f_i], dt)
+            dogs[f_i].observe(r, dt)
+    for f_i, dog in enumerate(dogs):
+        _report_stragglers(dog, f"fn[{f_i}]")
     return outs, best
 
 
@@ -62,17 +86,24 @@ def timed(fn, *args, repeats: int = 1, warmup: int = 1, **kw):
     the timed repeats — with the old behaviour every ``repeats=1`` number
     (all of fig2–fig7) measured compile time, not runtime.  Pass
     ``warmup=0`` only when compilation is the thing being measured.
+    A :class:`~repro.runtime.fault_tolerance.Watchdog` over the repeats
+    reports load-spike outliers on stderr.
     """
+    from repro.runtime.fault_tolerance import Watchdog
     out = None
     for _ in range(max(0, warmup)):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
     best = float("inf")
-    for _ in range(repeats):
+    dog = Watchdog()
+    for r in range(repeats):
         t0 = time.time()
         out = fn(*args, **kw)
         jax.block_until_ready(out)
-        best = min(best, time.time() - t0)
+        dt = time.time() - t0
+        best = min(best, dt)
+        dog.observe(r, dt)
+    _report_stragglers(dog, getattr(fn, "__name__", "timed"))
     return out, best
 
 

@@ -8,12 +8,18 @@ Public API — see README "Public API":
   its fitted-model carrier (``repro.core.largevis``).
 * :class:`LargeVisConfig` / :class:`RoutingConfig` — hyper-parameters
   and implementation routing (``repro.configs.largevis_default``).
+* :class:`CheckpointConfig` / :class:`HealthConfig` — crash-safe
+  stage-checkpointed resume and the divergence guard (README
+  "Robustness").
 """
 from repro.api import LargeVis, NotFittedError
-from repro.configs.largevis_default import LargeVisConfig, RoutingConfig
+from repro.configs.largevis_default import (CheckpointConfig, HealthConfig,
+                                            LargeVisConfig, RoutingConfig)
 from repro.core.largevis import LargeVisResult, largevis
 
 __all__ = [
+    "CheckpointConfig",
+    "HealthConfig",
     "LargeVis",
     "LargeVisConfig",
     "LargeVisResult",

@@ -42,6 +42,39 @@ class NotFittedError(RuntimeError):
     """``transform``/``insert`` called before ``fit``."""
 
 
+def _check_input(x, name: str, *, expect_dim: int | None = None,
+                 allow_empty: bool = False):
+    """Validate a points matrix at the public-API boundary.
+
+    Rejects (with a specific ``ValueError``) the failure modes that
+    otherwise surface as cryptic shape errors or silent NaN layouts deep
+    inside jitted stages: empty input, wrong rank, a feature-dimension
+    mismatch against the fitted corpus, and non-finite rows."""
+    import numpy as np
+    x = jnp.asarray(x)
+    if x.ndim != 2:
+        raise ValueError(
+            f"{name}: expected a 2-D (n_points, n_features) array, "
+            f"got shape {tuple(x.shape)}")
+    if x.shape[0] == 0 and not allow_empty:
+        raise ValueError(f"{name}: empty input (0 points)")
+    if x.shape[1] == 0:
+        raise ValueError(f"{name}: 0 features")
+    if expect_dim is not None and x.shape[1] != expect_dim:
+        raise ValueError(
+            f"{name}: {x.shape[1]} features, but the fitted corpus has "
+            f"{expect_dim} — transform/insert must match the fit dims")
+    if x.shape[0] and jnp.issubdtype(x.dtype, jnp.floating):
+        finite = np.asarray(jnp.all(jnp.isfinite(x), axis=1))
+        if not finite.all():
+            bad = np.flatnonzero(~finite)
+            raise ValueError(
+                f"{name}: {bad.size} row(s) contain NaN/Inf "
+                f"(first offenders: {bad[:5].tolist()}); clean or drop "
+                f"them before calling")
+    return x
+
+
 class LargeVis:
     """LargeVis visualization estimator (paper: Tang et al., WWW 2016).
 
@@ -68,6 +101,7 @@ class LargeVis:
 
     def fit(self, x, key=None, *, callback=None) -> "LargeVis":
         """Run the two-stage pipeline on ``x`` (N, d); returns ``self``."""
+        x = _check_input(x, "fit(x)")
         self.result_ = largevis(x, key, cfg=self.cfg, callback=callback)
         return self
 
@@ -86,6 +120,29 @@ class LargeVis:
                 "or fit_transform() first")
         return self.result_
 
+    # -- persistence -----------------------------------------------------
+
+    def save(self, path) -> None:
+        """Persist the fitted model at ``path`` (a directory).
+
+        Versioned, CRC-verified, atomically-committed on-disk format
+        (schema ``largevis-result-v1`` over the generic checkpointer) —
+        a kill mid-save can never clobber a previous good save, and a
+        bit-rotted file is detected at load instead of silently
+        producing a corrupt model.  Not a pickle: no code execution at
+        load, stable across refactors of this class."""
+        from repro.checkpoint.largevis_state import save_result
+        save_result(path, self._fitted())
+
+    @classmethod
+    def load(cls, path) -> "LargeVis":
+        """Restore a model saved by :meth:`save`; inverse round trip."""
+        from repro.checkpoint.largevis_state import load_result
+        result = load_result(path)
+        model = cls(cfg=result.cfg) if result.cfg is not None else cls()
+        model.result_ = result
+        return model
+
     # -- online operations ----------------------------------------------
 
     def transform(self, x_new, key=None):
@@ -96,6 +153,8 @@ class LargeVis:
         carrier is not mutated.  See ``core.transform.project``.
         """
         r = self._fitted()
+        x_new = _check_input(x_new, "transform(x_new)",
+                             expect_dim=int(r.x.shape[1]))
         if key is None:
             key = jax.random.fold_in(r.key, _TRANSFORM_TAG)
         y_new, _ = transform_lib.project(
@@ -116,6 +175,8 @@ class LargeVis:
         """
         r = self._fitted()
         cfg = r.cfg or self.cfg
+        x_new = _check_input(x_new, "insert(x_new)",
+                             expect_dim=int(r.x.shape[1]), allow_empty=True)
         if key is None:
             key = jax.random.fold_in(r.key, _INSERT_TAG)
         kp, kg = jax.random.split(key)

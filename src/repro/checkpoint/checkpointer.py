@@ -1,29 +1,50 @@
 """Sharded, atomic, rotating checkpoints (tensorstore-free: npz shards).
 
 Layout:  <dir>/step_<N>/
-            meta.json              tree structure + shapes + step
+            meta.json              tree structure + shapes + step + version
             shard_<i>.npz          flattened leaves (host-gathered)
             _COMMITTED             written LAST -> crash-safe atomicity
 
-Fault-tolerance contract (tested in tests/test_fault_tolerance.py):
+Fault-tolerance contract (tested in tests/test_fault_tolerance.py and
+tests/test_checkpoint.py):
   * save is atomic: a checkpoint without _COMMITTED is ignored on restore
     (a process killed mid-save can never corrupt training);
   * restore() -> bit-identical state -> bit-identical training continuation;
+  * corruption detection: every shard file's CRC32 is recorded in
+    meta.json; a committed-but-damaged checkpoint (bit rot, truncated
+    write that still renamed, manual tampering) fails verification and
+    ``restore()`` falls back to the newest *older* checkpoint that loads
+    cleanly instead of crashing or silently returning garbage;
+  * versioned schema: meta.json carries ``version`` (the on-disk format)
+    and a free-form ``schema`` tag (what the tree *is* — e.g.
+    ``largevis-result-v1``); readers reject formats newer than they
+    understand and schema tags they did not expect;
   * elastic restore: leaves are saved UNSHARDED (host-gathered), so a run
     checkpointed on P devices restores onto P' devices with any sharding
     (the loader re-shards with jax.device_put against the new mesh).
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import pathlib
 import shutil
 import time
+import warnings
+import zlib
 from typing import Optional
 
 import jax
 import numpy as np
+
+# on-disk format version.  v1 (pre-PR-8) has no "version"/"crc" fields and
+# is still readable (CRC verification is skipped for it); v2 adds them.
+FORMAT_VERSION = 2
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A committed checkpoint failed verification (CRC/shape/parse)."""
 
 
 def _flatten(tree):
@@ -31,9 +52,22 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _crc(path: pathlib.Path) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(block, crc)
+    return crc
+
+
 def save(ckpt_dir, step: int, tree, *, keep: int = 3,
-         shard_mb: int = 512) -> pathlib.Path:
-    """Write one checkpoint; returns its path."""
+         shard_mb: int = 512, schema: str = "pytree",
+         extra_meta: Optional[dict] = None) -> pathlib.Path:
+    """Write one checkpoint; returns its path.
+
+    ``schema`` tags what the tree is (validated by loaders that expect a
+    specific layout); ``extra_meta`` is an arbitrary JSON-able dict stored
+    in meta.json (returned by ``restore(..., return_meta=True)``)."""
     ckpt_dir = pathlib.Path(ckpt_dir)
     tmp = ckpt_dir / f"_tmp_step_{step}_{os.getpid()}"
     final = ckpt_dir / f"step_{step}"
@@ -44,25 +78,40 @@ def save(ckpt_dir, step: int, tree, *, keep: int = 3,
     leaves, treedef = _flatten(tree)
     # host-gather (works for sharded or replicated arrays)
     host = [np.asarray(jax.device_get(l)) for l in leaves]
-    meta = {"step": step, "treedef": jax.tree_util.tree_structure(
-        tree).serialize_using_proto().hex(),
-        "n_leaves": len(host), "time": time.time(),
-        "shapes": [list(h.shape) for h in host],
-        "dtypes": [str(h.dtype) for h in host]}
+    meta = {"version": FORMAT_VERSION, "schema": schema,
+            "step": step, "treedef": jax.tree_util.tree_structure(
+                tree).serialize_using_proto().hex(),
+            "n_leaves": len(host), "time": time.time(),
+            "shapes": [list(h.shape) for h in host],
+            "dtypes": [str(h.dtype) for h in host]}
+    if extra_meta:
+        meta["extra"] = extra_meta
+
+    def _write_shard(idx: int, leaves_dict: dict) -> tuple[str, int]:
+        # build the npz in memory so the CRC comes from the exact bytes
+        # about to hit disk (one write syscall, no read-back pass)
+        buf = io.BytesIO()
+        np.savez(buf, **leaves_dict)
+        data = buf.getbuffer()
+        (tmp / f"shard_{idx}.npz").write_bytes(data)
+        return f"shard_{idx}.npz", zlib.crc32(data)
 
     budget = shard_mb * (1 << 20)
-    shard, size, shard_idx, index = {}, 0, 0, []
+    shard, size, shard_idx, index, shard_crc = {}, 0, 0, [], {}
     for i, h in enumerate(host):
         shard[f"leaf_{i}"] = h
         size += h.nbytes
         index.append(shard_idx)
         if size >= budget:
-            np.savez(tmp / f"shard_{shard_idx}.npz", **shard)
+            name, crc = _write_shard(shard_idx, shard)
+            shard_crc[name] = crc
             shard, size = {}, 0
             shard_idx += 1
     if shard:
-        np.savez(tmp / f"shard_{shard_idx}.npz", **shard)
+        name, crc = _write_shard(shard_idx, shard)
+        shard_crc[name] = crc
     meta["leaf_shard"] = index
+    meta["shard_crc"] = shard_crc  # per-shard CRC32 (bit rot guard)
     (tmp / "meta.json").write_text(json.dumps(meta))
     (tmp / "_COMMITTED").write_text("ok")
     if final.exists():
@@ -94,29 +143,90 @@ def latest_step(ckpt_dir) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def restore(ckpt_dir, step: Optional[int] = None, *, shardings=None,
-            like=None):
-    """Load a checkpoint.  shardings: optional pytree of NamedShardings to
-    re-shard onto (elastic restore onto a different mesh/device count).
-    like: optional pytree for structure validation."""
-    ckpt_dir = pathlib.Path(ckpt_dir)
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
-    path = ckpt_dir / f"step_{step}"
-    assert (path / "_COMMITTED").exists(), f"uncommitted checkpoint {path}"
-    meta = json.loads((path / "meta.json").read_text())
+def _load_step(path: pathlib.Path, *, expect_schema: Optional[str] = None):
+    """Load + verify one committed checkpoint directory.
+
+    Raises :class:`CheckpointCorruptError` on any damage (unparseable
+    meta, missing/truncated/bit-rotted shards, leaf mismatch) and
+    ``ValueError`` on format/schema incompatibility."""
+    try:
+        meta = json.loads((path / "meta.json").read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(f"{path}: unreadable meta.json: {e}")
+    version = int(meta.get("version", 1))
+    if version > FORMAT_VERSION:
+        raise ValueError(
+            f"{path}: checkpoint format v{version} is newer than this "
+            f"reader (v{FORMAT_VERSION}) — upgrade the code, not the data")
+    if expect_schema is not None:
+        schema = meta.get("schema", "pytree")
+        if schema != expect_schema:
+            raise ValueError(
+                f"{path}: schema {schema!r} != expected {expect_schema!r}")
+    for name, want_crc in meta.get("shard_crc", {}).items():
+        p = path / name
+        if not p.exists():
+            raise CheckpointCorruptError(f"{path}: missing shard {name}")
+        if _crc(p) != want_crc:
+            raise CheckpointCorruptError(f"{path}: CRC mismatch in {name}")
     td_cls = type(jax.tree_util.tree_structure(0))
     treedef = td_cls.deserialize_using_proto(
         jax.tree_util.default_registry, bytes.fromhex(meta["treedef"]))
     shards = {}
     leaves = []
-    for i, sh_idx in enumerate(meta["leaf_shard"]):
-        if sh_idx not in shards:
-            shards[sh_idx] = np.load(path / f"shard_{sh_idx}.npz")
-        leaves.append(shards[sh_idx][f"leaf_{i}"])
-    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    try:
+        for i, sh_idx in enumerate(meta["leaf_shard"]):
+            if sh_idx not in shards:
+                shards[sh_idx] = np.load(path / f"shard_{sh_idx}.npz")
+            leaves.append(shards[sh_idx][f"leaf_{i}"])
+    except Exception as e:              # truncated npz, missing key, ...
+        raise CheckpointCorruptError(f"{path}: unreadable shards: {e}")
+    if len(leaves) != meta["n_leaves"]:
+        raise CheckpointCorruptError(
+            f"{path}: {len(leaves)} leaves != recorded {meta['n_leaves']}")
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+def restore(ckpt_dir, step: Optional[int] = None, *, shardings=None,
+            like=None, expect_schema: Optional[str] = None,
+            return_meta: bool = False):
+    """Load a checkpoint.
+
+    ``step=None`` loads the NEWEST committed checkpoint that passes
+    verification — a committed-but-corrupt directory (CRC mismatch,
+    truncated shard) is skipped with a warning and the previous one is
+    tried, so one damaged save never loses the run.  An explicit ``step``
+    raises on damage instead of falling back.
+
+    shardings: optional pytree of NamedShardings to re-shard onto (elastic
+    restore onto a different mesh/device count).  like: optional pytree
+    for structure validation.  ``return_meta=True`` appends the meta dict
+    to the return tuple."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        candidates = sorted(all_steps(ckpt_dir), reverse=True)
+        if not candidates:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    else:
+        candidates = [step]
+    tree = meta = None
+    last_err: Optional[Exception] = None
+    for s in candidates:
+        path = ckpt_dir / f"step_{s}"
+        assert (path / "_COMMITTED").exists(), f"uncommitted checkpoint {path}"
+        try:
+            tree, meta = _load_step(path, expect_schema=expect_schema)
+            break
+        except CheckpointCorruptError as e:
+            if step is not None:
+                raise
+            warnings.warn(f"skipping corrupt checkpoint: {e}",
+                          RuntimeWarning, stacklevel=2)
+            last_err = e
+    if tree is None:
+        raise CheckpointCorruptError(
+            f"every committed checkpoint in {ckpt_dir} failed verification "
+            f"(last error: {last_err})")
     if like is not None:
         jax.tree_util.tree_structure(like)  # raises on mismatch when mapped
         tree = jax.tree.map(lambda want, got: got.astype(want.dtype), like,
@@ -124,4 +234,6 @@ def restore(ckpt_dir, step: Optional[int] = None, *, shardings=None,
     if shardings is not None:
         tree = jax.tree.map(
             lambda arr, s: jax.device_put(arr, s), tree, shardings)
+    if return_meta:
+        return tree, meta["step"], meta
     return tree, meta["step"]

@@ -1,0 +1,290 @@
+"""LargeVis-native checkpoint schemas over the generic checkpointer.
+
+Two consumers:
+
+* **Model persistence** — :func:`save_result` / :func:`load_result`
+  serialize a fitted :class:`~repro.core.largevis.LargeVisResult`
+  (embedding, graph, sampler pytrees, cfg, key) as a versioned,
+  CRC-verified, atomically-committed checkpoint (schema
+  ``largevis-result-v1``) instead of a raw pickle.  ``LargeVis.save`` /
+  ``LargeVis.load`` wrap these.
+
+* **Crash recovery** — :class:`StageCheckpointer` persists each pipeline
+  stage boundary (``graph`` -> ``weights`` -> ``samplers`` -> ``layout``)
+  under ``CheckpointConfig.directory``, one subdirectory per stage, each
+  using the atomic write-then-commit protocol.  Every stage records a
+  **fingerprint** of (data sample, key, cfg); a resume against a
+  directory written by a different run is detected and ignored with a
+  warning instead of silently mixing states.
+
+Config serialization keeps only JSON-able values: the routing /
+checkpoint / health sub-configs nest as dicts, ``dtype`` round-trips by
+name, and the deprecated flat alias knobs are dropped on load (they are
+derived from ``routing``, and reconstructing through ``routing`` avoids
+re-triggering their DeprecationWarnings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import queue
+import threading
+import time
+import warnings
+import zlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpointer as ck
+from repro.configs.largevis_default import (CheckpointConfig, HealthConfig,
+                                            LargeVisConfig, RoutingConfig)
+
+RESULT_SCHEMA = "largevis-result-v1"
+
+# flat alias fields always hold routing-derived values after __post_init__;
+# they are dropped from serialized cfgs and reconstructed via `routing`
+_ALIAS_FIELDS = ("knn_impl", "sampler_impl", "fused_step", "knn_distributed")
+
+
+# ---------------------------------------------------------------------------
+# Config (de)serialization
+# ---------------------------------------------------------------------------
+
+def cfg_to_dict(cfg: LargeVisConfig) -> dict:
+    """JSON-able dict of a LargeVisConfig (drops derived alias fields)."""
+    d = dataclasses.asdict(cfg)
+    for f in _ALIAS_FIELDS:
+        d.pop(f, None)
+    d["dtype"] = np.dtype(cfg.dtype).name
+    return d
+
+
+def cfg_from_dict(d: dict) -> LargeVisConfig:
+    d = dict(d)
+    d["routing"] = RoutingConfig(**d.get("routing") or {})
+    for key, cls in (("checkpoint", CheckpointConfig),
+                     ("health", HealthConfig)):
+        v = d.get(key)
+        d[key] = cls(**v) if v else None
+    d["dtype"] = jnp.dtype(d.get("dtype", "float32")).type
+    known = {f.name for f in dataclasses.fields(LargeVisConfig)}
+    d = {k: v for k, v in d.items() if k in known and k not in _ALIAS_FIELDS}
+    return LargeVisConfig(**d)
+
+
+def run_fingerprint(x, key, cfg: LargeVisConfig) -> str:
+    """Short identity of a (data, key, cfg) run for resume validation.
+
+    The data component is a strided row sample (shape/dtype + CRC32 of
+    ~64 rows), cheap at any N; the cfg component excludes ``checkpoint``
+    itself so cadence/keep/dir changes never invalidate a resume."""
+    cfg_d = cfg_to_dict(cfg)
+    cfg_d.pop("checkpoint", None)
+    h = zlib.crc32(json.dumps(cfg_d, sort_keys=True).encode())
+    if key is not None:
+        h = zlib.crc32(np.asarray(jax.random.key_data(key)).tobytes(), h)
+    if x is not None:
+        xs = np.asarray(x[:: max(1, x.shape[0] // 64)])
+        h = zlib.crc32(
+            f"{tuple(np.shape(x))}:{np.asarray(x).dtype}".encode(), h)
+        h = zlib.crc32(np.ascontiguousarray(xs).tobytes(), h)
+    return f"{h:08x}"
+
+
+# ---------------------------------------------------------------------------
+# Sampler pytrees <-> plain array dicts
+# ---------------------------------------------------------------------------
+
+def _samplers_to_tree(edge_s, neg_s):
+    """(tree, static) for the flat EdgeSampler/NodeSampler pair (or None)."""
+    if edge_s is None or neg_s is None:
+        return None, None
+    tree = {"edge": {"src": edge_s.src, "dst": edge_s.dst,
+                     "threshold": edge_s.threshold, "alias": edge_s.alias},
+            "neg": {"threshold": neg_s.threshold, "alias": neg_s.alias}}
+    static = {"n_edges": int(edge_s.n_edges), "n_nodes": int(neg_s.n_nodes)}
+    return tree, static
+
+
+def _samplers_from_tree(tree, static):
+    from repro.core.sampler import EdgeSampler, NodeSampler
+    e, g = tree["edge"], tree["neg"]
+    as_dev = jnp.asarray
+    edge_s = EdgeSampler(as_dev(e["src"]), as_dev(e["dst"]),
+                         as_dev(e["threshold"]), as_dev(e["alias"]),
+                         n_edges=int(static["n_edges"]))
+    neg_s = NodeSampler(as_dev(g["threshold"]), as_dev(g["alias"]),
+                        n_nodes=int(static["n_nodes"]))
+    return edge_s, neg_s
+
+
+# ---------------------------------------------------------------------------
+# Fitted-model persistence (LargeVis.save / LargeVis.load)
+# ---------------------------------------------------------------------------
+
+def save_result(path, result) -> None:
+    """Persist a fitted LargeVisResult at ``path`` (a directory).
+
+    Atomic + CRC-verified via the generic checkpointer; the PRNG key is
+    stored as raw ``key_data`` (typed keys are not plain arrays)."""
+    tree = {"y": result.y, "knn_idx": result.knn_idx,
+            "knn_dist": result.knn_dist, "weights": result.weights}
+    if result.x is not None:
+        tree["x"] = result.x
+    if result.key is not None:
+        tree["key_data"] = jax.random.key_data(result.key)
+    s_tree, s_static = _samplers_to_tree(result.edge_sampler,
+                                         result.neg_sampler)
+    if s_tree is not None:
+        tree["samplers"] = s_tree
+    extra = {"edge_samples": int(result.edge_samples),
+             "timings": {k: float(v) for k, v in result.timings.items()},
+             "sampler_static": s_static,
+             "cfg": cfg_to_dict(result.cfg) if result.cfg else None}
+    ck.save(path, 0, tree, keep=1, schema=RESULT_SCHEMA, extra_meta=extra)
+
+
+def load_result(path):
+    """Load a fitted model saved by :func:`save_result`."""
+    from repro.core.largevis import LargeVisResult
+    tree, _, meta = ck.restore(path, 0, expect_schema=RESULT_SCHEMA,
+                               return_meta=True)
+    extra = meta.get("extra", {})
+    edge_s = neg_s = None
+    if "samplers" in tree:
+        edge_s, neg_s = _samplers_from_tree(tree["samplers"],
+                                            extra["sampler_static"])
+    key = None
+    if "key_data" in tree:
+        key = jax.random.wrap_key_data(jnp.asarray(tree["key_data"]))
+    cfg = cfg_from_dict(extra["cfg"]) if extra.get("cfg") else None
+    as_dev = jnp.asarray
+    return LargeVisResult(
+        y=as_dev(tree["y"]), knn_idx=as_dev(tree["knn_idx"]),
+        knn_dist=as_dev(tree["knn_dist"]), weights=as_dev(tree["weights"]),
+        timings=extra.get("timings", {}),
+        edge_samples=int(extra.get("edge_samples", 0)),
+        x=as_dev(tree["x"]) if "x" in tree else None,
+        edge_sampler=edge_s, neg_sampler=neg_s, cfg=cfg, key=key)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline stage checkpoints (crash recovery)
+# ---------------------------------------------------------------------------
+
+class StageCheckpointer:
+    """Atomic per-stage persistence under ``CheckpointConfig.directory``.
+
+    One subdirectory per stage (``graph``/``weights``/``samplers`` at
+    step 0; ``layout`` at its global step with keep-last-k rotation).
+    ``load`` returns ``None`` — never raises — when the stage is absent,
+    corrupt, or fingerprinted by a different run, so the pipeline falls
+    back to recomputing the stage."""
+
+    def __init__(self, ckpt_cfg: CheckpointConfig, fingerprint: str):
+        self.cfg = ckpt_cfg
+        self.fingerprint = fingerprint
+
+    def _dir(self, stage: str):
+        import pathlib
+        return pathlib.Path(self.cfg.directory) / stage
+
+    def save(self, stage: str, tree, *, step: int = 0, keep: int = 1,
+             extra: Optional[dict] = None):
+        ck.save(self._dir(stage), step, tree, keep=keep,
+                schema=f"largevis-stage-{stage}",
+                extra_meta={"fingerprint": self.fingerprint,
+                            **(extra or {})})
+
+    def load(self, stage: str):
+        """(tree, step, extra) of the newest valid checkpoint, else None."""
+        if not self.cfg.resume:
+            return None
+        try:
+            tree, step, meta = ck.restore(
+                self._dir(stage), expect_schema=f"largevis-stage-{stage}",
+                return_meta=True)
+        except FileNotFoundError:
+            return None
+        except (ck.CheckpointCorruptError, ValueError) as e:
+            warnings.warn(
+                f"checkpoint stage {stage!r} unusable ({e}); recomputing",
+                RuntimeWarning, stacklevel=2)
+            return None
+        extra = meta.get("extra", {})
+        if extra.get("fingerprint") != self.fingerprint:
+            warnings.warn(
+                f"checkpoint stage {stage!r} was written by a different "
+                f"run (fingerprint mismatch); recomputing",
+                RuntimeWarning, stacklevel=2)
+            return None
+        return tree, step, extra
+
+
+class AsyncStageWriter:
+    """Off-thread stage-checkpoint writer for unmonitored chunked runs.
+
+    The dispatch loop hands over an on-device snapshot of the state
+    (``jnp.copy`` — immutable, so it survives the donation of the live
+    buffer, and the copy itself dispatches asynchronously) and keeps
+    enqueueing chunks; this thread blocks on the snapshot's completion,
+    host-gathers it, and runs the atomic save protocol off the critical
+    path.  Saves commit in submission order (single thread, FIFO queue)
+    and :meth:`close` drains the queue before returning, so the final
+    stage boundary is durable when the driver returns.  The bounded
+    queue back-pressures the submitter if disk falls behind, keeping at
+    most ``depth`` snapshots alive.  A save failure is re-raised on the
+    next ``submit``/``close`` — a run may not silently claim durability.
+
+    An optional :class:`~repro.runtime.fault_tolerance.Watchdog` is fed
+    the wall time between successive snapshot *completions* — under a
+    saturated device queue that tracks per-cadence compute time, giving
+    straggler detection without blocking the dispatch loop (the first
+    interval is skipped: it would measure compile, not stepping).
+    """
+
+    def __init__(self, ckpt: StageCheckpointer, watchdog=None,
+                 depth: int = 2):
+        self._ckpt = ckpt
+        self._watchdog = watchdog
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: Optional[Exception] = None
+        self._t_last: Optional[float] = None
+        self._thread = threading.Thread(
+            target=self._run, name="stage-ckpt-writer", daemon=True)
+        self._thread.start()
+
+    def submit(self, stage: str, tree, *, step: int = 0, keep: int = 1,
+               extra: Optional[dict] = None):
+        if self._err is not None:
+            raise self._err
+        self._q.put((stage, tree, step, keep, extra))
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            if self._err is not None:
+                continue                    # drain without deadlocking put()
+            stage, tree, step, keep, extra = item
+            try:
+                jax.block_until_ready(tree)
+                now = time.time()
+                if self._watchdog is not None and self._t_last is not None:
+                    self._watchdog.observe(step, now - self._t_last)
+                self._t_last = now
+                self._ckpt.save(stage, tree, step=step, keep=keep,
+                                extra=extra)
+            except Exception as e:          # noqa: BLE001 — reraised on submit
+                self._err = e
+
+    def close(self):
+        """Drain pending saves and join; raises any deferred write error."""
+        self._q.put(None)
+        self._thread.join()
+        if self._err is not None:
+            raise self._err

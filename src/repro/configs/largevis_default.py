@@ -20,6 +20,52 @@ import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    """Stage-checkpointed crash recovery for ``largevis()`` / ``fit()``.
+
+    When set on ``LargeVisConfig.checkpoint``, every stage boundary of the
+    pipeline — the KNN graph, the calibrated+symmetrized weights, the
+    sampler pytrees, and the layout ``(y, step)`` every
+    ``every_chunks`` dispatches — is persisted atomically (the
+    ``checkpoint/`` machinery's write-then-rename-then-commit protocol)
+    under ``directory``.  A killed fit re-run with the same ``(x, key,
+    cfg)`` resumes from the last committed stage/chunk and produces a
+    **bitwise-identical** final embedding (pinned in tests/test_resume.py;
+    a config/key/data fingerprint guards against resuming someone else's
+    directory — mismatches start fresh with a warning).
+    """
+    directory: str
+    # layout save cadence, in steps_per_dispatch chunks.  A crash replays
+    # at most every_chunks*steps_per_dispatch steps; the default trades a
+    # few seconds of replay for keeping save overhead well under 5% even
+    # when writer and compute share one core (every_chunks=1 — a save per
+    # dispatch — is the chaos-test stress cadence, not a sane default)
+    every_chunks: int = 4
+    keep: int = 2             # keep-last-k layout checkpoints
+    resume: bool = True       # False: checkpoint but never auto-resume
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Numerical-health guard + divergence rollback for the layout stage.
+
+    When set on ``LargeVisConfig.health``, every ``check_every_chunks``
+    dispatches a jitted probe reduces the embedding to (non-finite count,
+    max |coordinate|).  A non-finite entry or a coordinate beyond
+    ``max_abs`` is a divergence: the driver rolls the layout back to the
+    last healthy chunk, scales the learning rate by ``lr_backoff``, and
+    re-runs from there (one structured ``DivergenceWarning``).  More than
+    ``max_rollbacks`` rollbacks raises ``LayoutDivergedError``.  The probe
+    syncs the device once per check, so default runs (``health=None``)
+    keep the fully-async dispatch pipeline.
+    """
+    check_every_chunks: int = 1
+    max_abs: float = 1e6          # embedding-norm blowup bound
+    lr_backoff: float = 0.5       # rho0 multiplier per rollback
+    max_rollbacks: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
 class RoutingConfig:
     """Implementation routing for every pipeline stage.
 
@@ -125,6 +171,11 @@ class LargeVisConfig:
     # --- out-of-sample transform (core/transform.py) ---
     transform_steps: int = 48       # frozen-corpus SGD steps per query batch
     transform_rho0: float = 0.0     # initial transform lr (0 -> rho0)
+    # --- robustness (crash recovery + numerical health; PR 8) ---
+    checkpoint: Optional[CheckpointConfig] = None   # stage-checkpointed
+    #   resume (None = no persistence, the historical behaviour)
+    health: Optional[HealthConfig] = None           # divergence guard +
+    #   rollback on the layout path (None = no per-chunk device sync)
     # --- implementation routing (one namespace; see RoutingConfig) ---
     routing: RoutingConfig = dataclasses.field(default_factory=RoutingConfig)
     # Deprecated flat aliases (pre-PR-7 names).  Passing one warns and

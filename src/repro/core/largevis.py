@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 
 import jax
 
@@ -47,6 +48,7 @@ from repro.core import knn as knn_lib
 from repro.core import layout as layout_lib
 from repro.core import perplexity as perp_lib
 from repro.core import sampler as sampler_lib
+from repro.runtime.fault_tolerance import DegradedModeWarning, InjectedFault
 
 
 @dataclasses.dataclass
@@ -93,7 +95,20 @@ def _data_mesh(cfg: LargeVisConfig):
     return make_data_mesh(cfg.data_shards)
 
 
-def build_graph(x, key, *, cfg: LargeVisConfig | None = None):
+def _stage_ckpt(x, key, cfg: LargeVisConfig):
+    """StageCheckpointer for the graph-prep stages, else None.
+
+    Unlike the layout's, this fingerprint includes a strided sample of
+    the DATA — resuming a prep stage against different points would
+    silently hand stage 2 another dataset's graph."""
+    if getattr(cfg, "checkpoint", None) is None:
+        return None
+    from repro.checkpoint.largevis_state import (StageCheckpointer,
+                                                 run_fingerprint)
+    return StageCheckpointer(cfg.checkpoint, run_fingerprint(x, key, cfg))
+
+
+def build_graph(x, key, *, cfg: LargeVisConfig | None = None, fault=None):
     """Stage 1: KNN graph + calibrated weights.
 
     ``cfg`` is keyword-only as of PR 7 (``cfg=None`` means a fresh
@@ -104,28 +119,58 @@ def build_graph(x, key, *, cfg: LargeVisConfig | None = None):
     perplexity calibration and all-gather symmetrization
     (`core/perplexity.py` sharded drivers) — the graph never leaves the
     mesh between KNN and weights, and the sharded weights are
-    bitwise-equal to the single-device path."""
+    bitwise-equal to the single-device path.
+
+    With ``cfg.checkpoint`` each sub-stage result (``graph``: the KNN
+    index/distances; ``weights``: the calibrated+symmetrized edge
+    weights) is persisted atomically at its boundary and restored on a
+    rerun — a kill anywhere in stage 1 resumes at the last completed
+    sub-stage with bitwise-equal outputs (the graph is deterministic in
+    ``(x, key, cfg)``, which is exactly what the fingerprint binds).
+    ``fault`` fires at sites ``stage:graph`` / ``stage:weights`` after
+    each boundary commits (the kill-matrix hook)."""
     cfg = cfg if cfg is not None else LargeVisConfig()
+    ckpt = _stage_ckpt(x, key, cfg)
+    idx = dist = w = None
+    if ckpt is not None:
+        jnp = jax.numpy
+        cached = ckpt.load("graph")
+        if cached is not None:
+            idx = jnp.asarray(cached[0]["idx"])
+            dist = jnp.asarray(cached[0]["dist"])
+        cached = ckpt.load("weights")
+        if cached is not None and idx is not None:
+            w = jnp.asarray(cached[0]["w"])
     t0 = time.time()
-    idx, dist = knn_lib.build_knn_graph(x, key, cfg)
-    # block (no transfer) so knn_s/weights_s split the stages honestly —
-    # async dispatch would otherwise smear KNN compute into weights_s
-    jax.block_until_ready((idx, dist))
+    if idx is None:
+        idx, dist = knn_lib.build_knn_graph(x, key, cfg)
+        # block (no transfer) so knn_s/weights_s split the stages honestly —
+        # async dispatch would otherwise smear KNN compute into weights_s
+        jax.block_until_ready((idx, dist))
+        if ckpt is not None:
+            ckpt.save("graph", {"idx": idx, "dist": dist})
+        if fault is not None:
+            fault.fire("stage:graph")
     t1 = time.time()
-    if cfg.distributed:
-        w = perp_lib.edge_weights_sharded(idx, dist, cfg.perplexity,
-                                          iters=cfg.perplexity_iters,
-                                          mesh=_data_mesh(cfg))
-    else:
-        w = perp_lib.edge_weights(idx, dist, cfg.perplexity,
-                                  iters=cfg.perplexity_iters)
-    jax.block_until_ready(w)
+    if w is None:
+        if cfg.distributed:
+            w = perp_lib.edge_weights_sharded(idx, dist, cfg.perplexity,
+                                              iters=cfg.perplexity_iters,
+                                              mesh=_data_mesh(cfg))
+        else:
+            w = perp_lib.edge_weights(idx, dist, cfg.perplexity,
+                                      iters=cfg.perplexity_iters)
+        jax.block_until_ready(w)
+        if ckpt is not None:
+            ckpt.save("weights", {"w": w})
+        if fault is not None:
+            fault.fire("stage:weights")
     t2 = time.time()
     return idx, dist, w, {"knn_s": t1 - t0, "weights_s": t2 - t1}
 
 
 def layout_graph(knn_idx, weights, key, *, cfg: LargeVisConfig | None = None,
-                 callback=None, return_samplers: bool = False):
+                 callback=None, return_samplers: bool = False, fault=None):
     """Stage 2: probabilistic layout of a weighted KNN graph.
 
     ``cfg`` is keyword-only as of PR 7.  With ``return_samplers=True`` the
@@ -149,27 +194,68 @@ def layout_graph(knn_idx, weights, key, *, cfg: LargeVisConfig | None = None,
     shard-selection table) and the layout runs through the local-SGD
     driver with the edge tables left sharded — samplers stay
     device-resident pytrees end to end, exactly like the single-device
-    boundary."""
+    boundary.
+
+    Robustness: with ``cfg.checkpoint`` the single-device alias tables
+    are persisted at the stage boundary (``samplers``) and the layout
+    self-checkpoints per chunk (see ``run_layout``); a failed device
+    sampler build demotes to the host Vose oracle with one
+    ``DegradedModeWarning``.  The distributed path skips the sampler
+    checkpoint (per-shard tables stay on their mesh; the build is
+    deterministic and cheap to redo) and checkpoints the layout at round
+    granularity.  ``fault`` fires ``stage:samplers`` after the boundary
+    commits and threads into the layout driver."""
     cfg = cfg if cfg is not None else LargeVisConfig()
+    ckpt = None if cfg.distributed else _stage_ckpt(weights, key, cfg)
+    edge_s = neg_s = None
+    if ckpt is not None:
+        from repro.checkpoint import largevis_state as lvs
+        cached = ckpt.load("samplers")
+        if cached is not None:
+            tree, _, extra = cached
+            edge_s, neg_s = lvs._samplers_from_tree(
+                tree, extra["sampler_static"])
     t0 = time.time()
     if cfg.distributed:
         edge_s, neg_s = sampler_lib.build_samplers_sharded(
             knn_idx, weights, power=cfg.neg_power, mesh=_data_mesh(cfg))
-    else:
-        edge_s = sampler_lib.build_edge_sampler(knn_idx, weights,
-                                                impl=cfg.sampler_impl)
-        neg_s = sampler_lib.build_negative_sampler(knn_idx, weights,
-                                                   power=cfg.neg_power,
-                                                   impl=cfg.sampler_impl)
+    elif edge_s is None:
+        try:
+            edge_s = sampler_lib.build_edge_sampler(knn_idx, weights,
+                                                    impl=cfg.sampler_impl)
+            neg_s = sampler_lib.build_negative_sampler(knn_idx, weights,
+                                                       power=cfg.neg_power,
+                                                       impl=cfg.sampler_impl)
+        except InjectedFault:
+            raise
+        except Exception as e:
+            # degraded mode: a backend failure in the jitted device build
+            # falls back to the numpy Vose oracle instead of crashing
+            if cfg.sampler_impl == "host":
+                raise
+            warnings.warn(DegradedModeWarning(
+                "sampler_build", cfg.sampler_impl, "host", e), stacklevel=2)
+            edge_s = sampler_lib.build_edge_sampler(knn_idx, weights,
+                                                    impl="host")
+            neg_s = sampler_lib.build_negative_sampler(knn_idx, weights,
+                                                       power=cfg.neg_power,
+                                                       impl="host")
+        jax.block_until_ready((edge_s.threshold, neg_s.threshold))
+        if ckpt is not None:
+            from repro.checkpoint import largevis_state as lvs
+            tree, static = lvs._samplers_to_tree(edge_s, neg_s)
+            ckpt.save("samplers", tree, extra={"sampler_static": static})
+        if fault is not None:
+            fault.fire("stage:samplers")
     jax.block_until_ready((edge_s.threshold, neg_s.threshold))
     t1 = time.time()
     if cfg.distributed:
         res = layout_lib.run_layout_local_sgd(key, edge_s, neg_s,
                                               knn_idx.shape[0], cfg,
-                                              _data_mesh(cfg))
+                                              _data_mesh(cfg), fault=fault)
     else:
         res = layout_lib.run_layout(key, edge_s, neg_s, knn_idx.shape[0],
-                                    cfg, callback=callback)
+                                    cfg, callback=callback, fault=fault)
     t2 = time.time()
     timings = {"sampler_s": t1 - t0, "layout_s": t2 - t1}
     if return_samplers:
@@ -179,20 +265,28 @@ def layout_graph(knn_idx, weights, key, *, cfg: LargeVisConfig | None = None,
 
 
 def largevis(x, key=None, *, cfg: LargeVisConfig | None = None,
-             callback=None) -> LargeVisResult:
+             callback=None, fault=None) -> LargeVisResult:
     """Run the full pipeline; the functional core of :class:`repro.LargeVis`.
 
     ``cfg`` is keyword-only as of PR 7.  The result is a full fitted-model
     carrier (corpus points, samplers, cfg, key), so ``repro.core.transform``
     and the estimator's online operations can run against it directly.
+
+    Crash safety (PR 8): set ``cfg.checkpoint`` and rerun the *same call*
+    after a crash — each completed stage (``graph``, ``weights``,
+    ``samplers``, per-chunk ``layout``) restores from disk and the final
+    embedding is bitwise-equal to an uninterrupted run (tests/test_resume.py
+    kills at every boundary).  ``fault`` takes a
+    :class:`~repro.runtime.fault_tolerance.FaultInjector` for those tests.
     """
     cfg = cfg if cfg is not None else LargeVisConfig()
     if key is None:
         key = jax.random.key(cfg.seed)
     kg, kl = jax.random.split(key)
-    idx, dist, w, t_graph = build_graph(x, kg, cfg=cfg)
+    idx, dist, w, t_graph = build_graph(x, kg, cfg=cfg, fault=fault)
     res, (edge_s, neg_s), t_layout = layout_graph(
-        idx, w, kl, cfg=cfg, callback=callback, return_samplers=True)
+        idx, w, kl, cfg=cfg, callback=callback, return_samplers=True,
+        fault=fault)
     return LargeVisResult(y=res.y, knn_idx=idx, knn_dist=dist, weights=w,
                           timings={**t_graph, **t_layout},
                           edge_samples=res.edge_samples,

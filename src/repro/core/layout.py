@@ -20,6 +20,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -31,6 +33,9 @@ from repro.core.layout_engine import sgd_edge_step
 from repro.core.sampler import (EdgeSampler, NodeSampler,
                                 ShardedEdgeSampler, ShardedNodeSampler)
 from repro.runtime.compat import shard_map
+from repro.runtime.fault_tolerance import (DegradedModeWarning,
+                                           DivergenceWarning, InjectedFault,
+                                           LayoutDivergedError, Watchdog)
 
 
 @functools.partial(
@@ -51,6 +56,44 @@ class LayoutResult:
     y: jax.Array
     steps: int
     edge_samples: int
+    # robustness diagnostics (PR 8): divergence rollbacks taken, the final
+    # lr backoff scale, and the watchdog's straggler dispatches
+    rollbacks: int = 0
+    rho0_scale: float = 1.0
+    stragglers: list = dataclasses.field(default_factory=list)
+
+
+@jax.jit
+def layout_health(y):
+    """Jitted per-dispatch health probe: one reduction pass over (N, s).
+
+    Returns ``(nonfinite_count, max_abs)`` — non-finite entries are
+    excluded from the max so a single NaN cannot mask a norm blowup."""
+    finite = jnp.isfinite(y)
+    nonfinite = jnp.sum(~finite)
+    max_abs = jnp.max(jnp.abs(jnp.where(finite, y, 0.0)))
+    return nonfinite, max_abs
+
+
+def _layout_stage_ckpt(key, n_nodes, cfg, edge_sampler=None):
+    """StageCheckpointer for the layout stage, else None.
+
+    The layout trajectory is a pure function of (samplers, key, cfg, N),
+    so the fingerprint binds all four — the sampler via a strided sample
+    of its alias threshold table, which is itself a deterministic
+    function of the input data.  A directory written by a different
+    run (other data, key, or hyper-params) can never resume into this
+    one, even at identical N."""
+    ckpt_cfg = getattr(cfg, "checkpoint", None)
+    if ckpt_cfg is None:
+        return None
+    from repro.checkpoint.largevis_state import (StageCheckpointer,
+                                                 run_fingerprint)
+    table = None
+    if edge_sampler is not None:
+        table = np.asarray(edge_sampler.threshold).reshape(-1, 1)
+    fp = run_fingerprint(table, key, cfg) + f"-n{n_nodes}"
+    return StageCheckpointer(ckpt_cfg, fp)
 
 
 def _collision_capped_batch(batch_size: int, n_nodes: int,
@@ -185,12 +228,29 @@ def make_local_sgd_fns(mesh, cfg, n_nodes: int, *, batch: int):
 
 def run_layout_local_sgd(key, edge_sampler: EdgeSampler,
                          neg_sampler: NodeSampler, n_nodes: int, cfg,
-                         mesh) -> LayoutResult:
-    """Multi-device local-SGD layout driver (paper's async SGD, TPU form)."""
+                         mesh, *, fault=None) -> LayoutResult:
+    """Multi-device local-SGD layout driver (paper's async SGD, TPU form).
+
+    Checkpointing (``cfg.checkpoint``) is at **round** granularity: after
+    the psum-of-deltas sync every replica holds the identical embedding,
+    so persisting ``y_rep[0]`` at a round boundary and re-broadcasting on
+    resume reconstructs the exact distributed state.  The round seeds are
+    pre-derived in one batch from ``kr``, so a resumed run replays the
+    same per-round key stream — killed+resumed is bitwise-equal to
+    uninterrupted, exactly as on the single-device path.
+    """
     n_dev = mesh.shape["data"]
+    stage_ckpt = _layout_stage_ckpt(key, n_nodes, cfg, edge_sampler)
+    ckpt_cfg = getattr(cfg, "checkpoint", None)
     ky, kr = jax.random.split(key)
     y0 = (jax.random.normal(ky, (n_nodes, cfg.out_dim), jnp.float32)
           * cfg.init_scale)
+    start_round = 0
+    if stage_ckpt is not None:
+        loaded = stage_ckpt.load("layout")
+        if loaded is not None:
+            tree, start_round, _ = loaded
+            y0 = jnp.asarray(tree["y"], jnp.float32)
     y_rep = jnp.broadcast_to(y0, (n_dev,) + y0.shape)
     from jax.sharding import NamedSharding, PartitionSpec as P
     y_rep = jax.device_put(y_rep, NamedSharding(mesh, P("data", None, None)))
@@ -205,6 +265,7 @@ def run_layout_local_sgd(key, edge_sampler: EdgeSampler,
     steps = max(1, total // (batch * n_dev))
     H = max(1, cfg.sync_every)
     n_rounds = max(1, steps // H)
+    start_round = min(int(start_round), n_rounds)
     local_steps = make_local_sgd_fns(mesh, cfg, n_nodes, batch=batch)
     dt = 1.0 / max(steps, 1)
     # one batched draw + one device->host transfer for ALL round seeds:
@@ -212,19 +273,31 @@ def run_layout_local_sgd(key, edge_sampler: EdgeSampler,
     # synchronous device round trip every H steps, serializing the rounds
     seeds = np.asarray(jax.random.randint(kr, (n_rounds,), 0, 2**31 - 1,
                                           dtype=jnp.int32))
-    for r in range(n_rounds):
+    for r in range(start_round, n_rounds):
         y_rep = local_steps(
             y_rep, jnp.asarray(seeds[r:r + 1]), jnp.float32(r * H * dt),
             jnp.float32(dt), edge_sampler, neg_sampler)
-    return LayoutResult(y=y_rep[0], steps=n_rounds * H,
-                        edge_samples=n_rounds * H * batch * n_dev)
+        if fault is not None:
+            jax.block_until_ready(y_rep)
+            fault.fire("layout_round")
+        if stage_ckpt is not None and (
+                (r + 1) % max(1, ckpt_cfg.every_chunks) == 0
+                or r + 1 >= n_rounds):
+            stage_ckpt.save("layout", {"y": y_rep[0]}, step=r + 1,
+                            keep=max(1, ckpt_cfg.keep))
+            if fault is not None:
+                fault.fire("layout_saved")
+    done = n_rounds - start_round
+    return LayoutResult(y=y_rep[0], steps=done * H,
+                        edge_samples=done * H * batch * n_dev)
 
 
 def run_layout(key, edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
                n_nodes: int, cfg, *,
                callback: Optional[Callable] = None,
                y0=None, start_step: int = 0,
-               on_chunk: Optional[Callable] = None) -> LayoutResult:
+               on_chunk: Optional[Callable] = None,
+               fault=None) -> LayoutResult:
     """Drive the layout for T = samples_per_node * N edge samples.
 
     Default path: ``layout_engine.layout_chunk`` — H =
@@ -238,7 +311,45 @@ def run_layout(key, edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
     step ``start_step`` would have run.  ``on_chunk(t, steps, y)`` fires
     after every dispatch on the scanned path with ``y`` synced — the
     checkpoint/watchdog/progress hook for chunked drivers.
+
+    Robustness (scanned path; see README "Robustness"):
+
+    * ``cfg.checkpoint`` — the layout self-checkpoints every
+      ``every_chunks`` dispatches (atomic, keep-last-k, fingerprinted to
+      this (key, cfg, N)); with no explicit ``y0`` it auto-resumes from
+      the newest valid checkpoint, continuing the exact (key, lr) stream
+      — a killed+resumed run is bitwise-equal to an uninterrupted one.
+    * ``cfg.health`` — a jitted probe checks the embedding every
+      ``check_every_chunks`` dispatches; divergence (non-finite entries
+      or |y| past ``max_abs``) rolls back to the last healthy chunk with
+      the lr scaled by ``lr_backoff`` (``DivergenceWarning``), raising
+      ``LayoutDivergedError`` after ``max_rollbacks`` attempts.
+    * degraded mode — a backend failure dispatching the first fused
+      chunk demotes ``fused -> split`` for the run with one
+      ``DegradedModeWarning`` instead of crashing the fit.
+    * a :class:`~repro.runtime.fault_tolerance.Watchdog` times every
+      blocked dispatch and surfaces outliers in ``result.stragglers``
+      (chunks are only blocked-on when a hook/health/fault already
+      forces the sync — a checkpoint-only run keeps the async pipeline:
+      saves go through an off-thread
+      :class:`~repro.checkpoint.largevis_state.AsyncStageWriter` fed
+      on-device ``jnp.copy`` snapshots, and the watchdog times the
+      interval between snapshot completions instead).
+    * ``fault`` — a FaultInjector fired at ``layout_chunk`` (post-chunk
+      payload = y) and ``layout_saved`` (post-checkpoint-commit) for the
+      kill/chaos test matrices.
     """
+    health = getattr(cfg, "health", None)
+    stage_ckpt = _layout_stage_ckpt(key, n_nodes, cfg, edge_sampler)
+    rho0_scale, rollbacks = 1.0, 0
+    if stage_ckpt is not None and y0 is None and start_step == 0:
+        loaded = stage_ckpt.load("layout")
+        if loaded is not None:
+            tree, saved_step, extra = loaded
+            y0, start_step = tree["y"], saved_step
+            rho0_scale = float(extra.get("rho0_scale", 1.0))
+            rollbacks = int(extra.get("rollbacks", 0))
+
     ky, kr = jax.random.split(key)
     if y0 is None:
         y = (jax.random.normal(ky, (n_nodes, cfg.out_dim), jnp.float32)
@@ -252,24 +363,116 @@ def run_layout(key, edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
     kwargs = _step_kwargs(edge_sampler, neg_sampler, n_nodes, cfg, batch)
 
     H = int(getattr(cfg, "steps_per_dispatch", 0))
+    watchdog = None
     if callback is None and H > 1:
-        t = start
-        while t < steps:
-            h = min(H, steps - t)
-            step_ids = jnp.arange(t, t + h, dtype=jnp.int32)
-            # host-side t/steps (f64 rounded to f32) — bit-identical to the
-            # Python loop's jnp.float32(t / steps) schedule
-            t_fracs = jnp.asarray(np.arange(t, t + h) / steps, jnp.float32)
-            y = layout_engine.layout_chunk(y, kr, step_ids, t_fracs, **kwargs)
-            t += h
-            if on_chunk is not None:
-                jax.block_until_ready(y)
-                on_chunk(t, steps, y)
+        # block on every chunk only when something already needs the sync;
+        # a checkpoint-only run keeps the async pipeline — saves go to an
+        # off-thread writer fed on-device snapshots, so durability costs a
+        # device memcpy per cadence instead of a pipeline stall per chunk
+        monitored = (on_chunk is not None or health is not None
+                     or fault is not None)
+        watchdog = (Watchdog() if monitored or stage_ckpt is not None
+                    else None)
+        writer = None
+        if stage_ckpt is not None and not monitored:
+            from repro.checkpoint.largevis_state import AsyncStageWriter
+            writer = AsyncStageWriter(stage_ckpt, watchdog=watchdog)
+        ckpt_cfg = getattr(cfg, "checkpoint", None)
+        last_good = (np.asarray(y), start) if health is not None else None
+        t, chunk_i, first_chunk = start, 0, True
+        try:
+            while t < steps:
+                h = min(H, steps - t)
+                step_ids = jnp.arange(t, t + h, dtype=jnp.int32)
+                # host-side t/steps (f64 rounded to f32) — bit-identical to
+                # the Python loop's jnp.float32(t / steps) schedule
+                t_fracs = jnp.asarray(np.arange(t, t + h) / steps,
+                                      jnp.float32)
+                kwargs["rho0"] = cfg.rho0 * rho0_scale  # traced: no recompile
+                t0 = time.time()
+                if first_chunk and kwargs["fused_step"]:
+                    # degraded-mode guard: donation invalidates y at
+                    # dispatch, so snapshot once to make the retry safe
+                    y_backup = np.asarray(y)
+                    try:
+                        y = layout_engine.layout_chunk(y, kr, step_ids,
+                                                       t_fracs, **kwargs)
+                    except InjectedFault:
+                        raise
+                    except Exception as e:      # backend/compile failure
+                        warnings.warn(DegradedModeWarning(
+                            "layout_step", "fused", "split", e),
+                            stacklevel=2)
+                        kwargs["fused_step"] = False
+                        y = layout_engine.layout_chunk(
+                            jnp.asarray(y_backup), kr, step_ids, t_fracs,
+                            **kwargs)
+                else:
+                    y = layout_engine.layout_chunk(y, kr, step_ids, t_fracs,
+                                                   **kwargs)
+                first_chunk = False
+                t += h
+                chunk_i += 1
+                if monitored:
+                    jax.block_until_ready(y)
+                    watchdog.observe(t, time.time() - t0)
+                if fault is not None:
+                    y = fault.fire("layout_chunk", y)
+                if health is not None and (
+                        chunk_i % max(1, health.check_every_chunks) == 0
+                        or t >= steps):
+                    nf, mx = layout_health(y)
+                    nf, mx = int(nf), float(mx)
+                    if nf or mx > health.max_abs:
+                        rollbacks += 1
+                        if rollbacks > health.max_rollbacks:
+                            raise LayoutDivergedError(
+                                f"layout still diverging after "
+                                f"{health.max_rollbacks} rollbacks "
+                                f"(step {t}: nonfinite={nf}, "
+                                f"max|y|={mx:.3g})")
+                        rho0_scale *= health.lr_backoff
+                        warnings.warn(DivergenceWarning(
+                            t, last_good[1], nf, mx, rho0_scale),
+                            stacklevel=2)
+                        y, t = jnp.asarray(last_good[0]), last_good[1]
+                        continue
+                    last_good = (np.asarray(y), t)
+                if stage_ckpt is not None and (
+                        chunk_i % max(1, ckpt_cfg.every_chunks) == 0
+                        or t >= steps):
+                    extra = {"rho0_scale": rho0_scale,
+                             "rollbacks": rollbacks}
+                    keep = max(1, ckpt_cfg.keep)
+                    if writer is not None:
+                        writer.submit("layout", {"y": jnp.copy(y)}, step=t,
+                                      keep=keep, extra=extra)
+                    else:
+                        stage_ckpt.save("layout", {"y": y}, step=t,
+                                        keep=keep, extra=extra)
+                        if fault is not None:
+                            fault.fire("layout_saved")
+                if on_chunk is not None:
+                    on_chunk(t, steps, y)
+        finally:
+            if writer is not None:
+                writer.close()
     else:
         for t in range(start, steps):
             y = layout_step(y, jax.random.fold_in(kr, t),
                             jnp.float32(t / steps), **kwargs)
             if callback is not None and (t % max(1, steps // 20) == 0):
                 callback(t, steps, y)
+    stragglers = list(watchdog.stragglers) if watchdog is not None else []
+    # surface stragglers only when the outlier is macroscopic — 3x a
+    # sub-millisecond median is host jitter, not a sick device
+    if stragglers and max(s[1] for s in stragglers) > 0.1:
+        warnings.warn(
+            f"layout: {len(stragglers)} straggler dispatch(es) — worst "
+            f"{max(s[1] for s in stragglers):.3f}s vs median "
+            f"{stragglers[-1][2]:.3f}s (see LayoutResult.stragglers)",
+            RuntimeWarning, stacklevel=2)
     done = steps - start
-    return LayoutResult(y=y, steps=done, edge_samples=done * batch)
+    return LayoutResult(y=y, steps=done, edge_samples=done * batch,
+                        rollbacks=rollbacks, rho0_scale=rho0_scale,
+                        stragglers=stragglers)

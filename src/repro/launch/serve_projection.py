@@ -44,6 +44,13 @@ from repro.configs.largevis_default import LargeVisConfig
 from repro.core import perplexity as perp_lib
 from repro.core.layout_engine import apply_edge_batch
 from repro.core.transform import sample_query_edges, uniform_node_sampler
+from repro.runtime.fault_tolerance import InjectedFault
+
+
+class QueueFullError(RuntimeError):
+    """Admission backpressure: ``submit`` refused because the engine's
+    queue is at ``max_queue``.  The caller sheds load or retries later —
+    unbounded queueing would instead grow latency without bound."""
 
 
 @dataclasses.dataclass
@@ -54,6 +61,7 @@ class ProjectRequest:
     t_submit: float = 0.0
     t_done: float = 0.0
     done: bool = False
+    error: Optional[str] = None        # set when quarantined/retired-on-error
 
     @property
     def latency(self) -> float:
@@ -110,7 +118,10 @@ class ProjectionEngine:
     """
 
     def __init__(self, model, *, slots: int = 256,
-                 cfg: LargeVisConfig | None = None, seed: int = 0):
+                 cfg: LargeVisConfig | None = None, seed: int = 0,
+                 max_queue: Optional[int] = None,
+                 slot_step_budget: Optional[int] = None,
+                 fault=None):
         cfg = cfg or getattr(model, "cfg", None) or LargeVisConfig()
         self.cfg = cfg
         self.slots = slots
@@ -139,11 +150,49 @@ class ProjectionEngine:
         self.queue: List[ProjectRequest] = []
         self.requests: List[Optional[ProjectRequest]] = [None] * slots
         self.completed: List[ProjectRequest] = []
+        # robustness (PR 8): admission backpressure, per-slot step budget
+        # (a stuck slot is force-retired with an error instead of pinning
+        # its slot forever), the quarantine list for rejected/poisoned
+        # requests, and the deterministic fault injector for chaos tests
+        self.max_queue = max_queue
+        self.slot_step_budget = (slot_step_budget if slot_step_budget
+                                 else 4 * self.steps)
+        self.fault = fault
+        self.quarantined: List[ProjectRequest] = []
+        self.faults_retried = 0
+        # engine step at which each slot was admitted (budget clock)
+        self._slot_born = np.zeros((slots,), np.int64)
 
     # ------------------------------------------------------------------
-    def submit(self, req: ProjectRequest):
+    def submit(self, req: ProjectRequest) -> bool:
+        """Queue a request; returns False when it was quarantined instead.
+
+        Validation happens HERE, not in the hot loop: a query row with
+        the wrong dimensionality or any NaN/Inf never enters the queue
+        (it completes immediately with ``req.error`` set and lands in
+        ``self.quarantined``), so faulty traffic cannot perturb the slot
+        assignment, key stream, or results of healthy requests — the
+        healthy subset of a poisoned workload retires bitwise-equal to a
+        fault-free run (tests/test_chaos_serving.py).  Raises
+        :class:`QueueFullError` at ``max_queue`` (backpressure)."""
         req.t_submit = req.t_submit or time.time()
+        if self.fault is not None:
+            req = self.fault.fire("submit", req)
+        xq = np.asarray(req.x, np.float32).reshape(-1)
+        d = int(self.x.shape[1])
+        if xq.shape[0] != d:
+            req.error = (f"query dim {xq.shape[0]} != corpus dim {d}")
+        elif not np.all(np.isfinite(xq)):
+            req.error = "query contains NaN/Inf"
+        if req.error is not None:
+            req.done, req.t_done = True, time.time()
+            self.quarantined.append(req)
+            return False
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            raise QueueFullError(
+                f"queue at max_queue={self.max_queue}; retry later")
         self.queue.append(req)
+        return True
 
     def _admit(self):
         """Fill every free slot from the queue with ONE batched prefill.
@@ -162,6 +211,9 @@ class ProjectionEngine:
             jnp.asarray(xq), self.x, self.y_full[:self.n],
             k=self.k, perplexity=float(min(self.cfg.perplexity, self.k)),
             iters=self.cfg.perplexity_iters)
+        if self.fault is not None:
+            nn_idx, p_log, y0 = self.fault.fire("prefill",
+                                                (nn_idx, p_log, y0))
         rows = jnp.asarray(free[:n_adm], jnp.int32)
         take = jnp.arange(n_adm)
         self.nn_idx = self.nn_idx.at[rows].set(nn_idx[take])
@@ -172,31 +224,66 @@ class ProjectionEngine:
         for b, req in enumerate(batch):
             self.requests[free[b]] = req
             self._host_ages[free[b]] = 0
+            self._slot_born[free[b]] = self.step_no
 
     def _retire(self):
-        done_rows = [s for s in range(self.slots)
-                     if self.requests[s] is not None
-                     and self._host_ages[s] >= self.steps]
-        if not done_rows:
+        """Complete finished slots; quarantine poisoned or stuck ones.
+
+        Two error paths free a slot WITHOUT returning coordinates:
+        a slot whose retired row contains NaN/Inf (corruption escaped
+        into the embedding) and a slot still unfinished after
+        ``slot_step_budget`` engine steps (stuck — e.g. its ages stopped
+        advancing after a fault).  Both complete their request with
+        ``req.error`` set into ``self.quarantined``; the engine keeps
+        serving every other slot."""
+        done_rows, stuck_rows = [], []
+        for s in range(self.slots):
+            if self.requests[s] is None:
+                continue
+            if self._host_ages[s] >= self.steps:
+                done_rows.append(s)
+            elif self.step_no - self._slot_born[s] >= self.slot_step_budget:
+                stuck_rows.append(s)
+        all_rows = done_rows + stuck_rows
+        if not all_rows:
             return
-        coords = np.asarray(self.y_full[self.n + jnp.asarray(done_rows)])
+        coords = np.asarray(self.y_full[self.n + jnp.asarray(all_rows)])
+        if self.fault is not None:
+            coords = self.fault.fire("retire", coords)
         now = time.time()
-        rows = jnp.asarray(done_rows, jnp.int32)
+        rows = jnp.asarray(all_rows, jnp.int32)
         self.active = self.active.at[rows].set(False)
         self.ages = self.ages.at[rows].set(0)
-        for c, s in enumerate(done_rows):
+        for c, s in enumerate(all_rows):
             req = self.requests[s]
-            req.y, req.t_done, req.done = coords[c], now, True
-            self.completed.append(req)
+            req.t_done, req.done = now, True
+            if s in stuck_rows:
+                req.error = (f"slot {s} exceeded its step budget "
+                             f"({self.slot_step_budget} engine steps) "
+                             f"before finishing; force-retired")
+                self.quarantined.append(req)
+            elif not np.all(np.isfinite(coords[c])):
+                req.error = "projection diverged: non-finite coordinates"
+                self.quarantined.append(req)
+            else:
+                req.y = coords[c]
+                self.completed.append(req)
             self.requests[s] = None
 
     def step(self) -> bool:
         """Admit -> one lockstep fused transform step -> retire.
 
-        Returns False when there is nothing left to do."""
+        Returns False when there is nothing left to do.  The ``step``
+        fault site fires BEFORE the dispatch and before any engine state
+        advances, so an injected exception here is retryable with zero
+        drift: ``step_no``/ages move only on success, and the retried
+        step replays the identical key -> bitwise the same trajectory as
+        a fault-free run (``run`` does this automatically)."""
         self._admit()
         if not any(r is not None for r in self.requests):
             return False
+        if self.fault is not None:
+            self.y_full = self.fault.fire("step", self.y_full)
         rho0 = self.cfg.transform_rho0 or self.cfg.rho0
         self.y_full, self.ages = _lockstep_step(
             self.y_full, jax.random.fold_in(self.key, self.step_no),
@@ -213,11 +300,23 @@ class ProjectionEngine:
         return True
 
     def run(self, max_steps: int = 10_000_000) -> int:
-        """Drain the queue; returns the number of engine steps taken."""
+        """Drain the queue; returns the number of engine step attempts.
+
+        An :class:`~repro.runtime.fault_tolerance.InjectedFault` raised
+        at the ``step`` site is caught and the step retried (counted in
+        ``faults_retried``); retries are bitwise-transparent because no
+        engine state advanced (see :meth:`step`).  Real exceptions
+        propagate."""
         n = 0
         while (self.queue or any(r is not None for r in self.requests)) \
                 and n < max_steps:
-            if not self.step():
+            try:
+                progressed = self.step()
+            except InjectedFault:
+                self.faults_retried += 1
+                n += 1
+                continue
+            if not progressed:
                 break
             n += 1
         jax.block_until_ready(self.y_full)

@@ -2,15 +2,22 @@
 
 What executes here (and is tested):
   * checkpoint/restart — atomic saves, auto-resume, bit-identical
-    continuation (tests/test_fault_tolerance.py kills a training run
-    mid-stream and verifies the restarted loss trajectory matches an
+    continuation (tests/test_fault_tolerance.py and tests/test_resume.py
+    kill runs mid-stream and verify the restarted trajectory matches an
     uninterrupted one exactly);
   * elastic re-scale — host-gathered checkpoints restore onto a different
     device count / mesh shape (re-shard on load);
   * straggler mitigation — a step-time watchdog flags outlier steps; the
     LargeVis layout runs under local-SGD (sync_every=H) so a slow worker
     delays the psum only every H steps; LM training uses bounded-staleness
-    gradient accumulation (microbatches absorb jitter between syncs).
+    gradient accumulation (microbatches absorb jitter between syncs);
+  * deterministic fault injection — :class:`FaultInjector` fires NaN
+    corruption / exceptions / SIGKILL at *named sites* threaded through
+    the LargeVis pipeline (``largevis(..., fault=...)``) and the
+    projection server (``ProjectionEngine(fault=...)``), driving the
+    kill/resume and chaos-serving test matrices;
+  * degraded-mode + divergence signalling — the structured warning
+    categories the pipeline emits exactly once per demotion/rollback.
 
 What is posture-only on this CPU container (documented, not simulated away):
 real preemption signals (SIGTERM hooks call CheckpointManager.save_now) and
@@ -20,6 +27,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import signal
 import time
 from typing import Callable, Optional
@@ -44,6 +52,111 @@ class Watchdog:
             self.stragglers.append((step, dt, med))
             return True
         return False
+
+
+class DegradedModeWarning(UserWarning):
+    """A pipeline stage demoted its implementation after a backend failure
+    (``fused -> ref/split`` kernels, ``device -> host`` sampler builds).
+    Emitted exactly once per demotion with the stage, the route taken,
+    and the original error."""
+
+    def __init__(self, stage: str, from_impl: str, to_impl: str, cause):
+        self.stage, self.from_impl, self.to_impl = stage, from_impl, to_impl
+        self.cause = cause
+        super().__init__(
+            f"degraded mode: {stage} demoted {from_impl!r} -> {to_impl!r} "
+            f"after {type(cause).__name__}: {cause}")
+
+
+class DivergenceWarning(UserWarning):
+    """The layout health probe detected non-finite coordinates or a norm
+    blowup; the driver rolled back to the last healthy chunk with the
+    learning rate backed off."""
+
+    def __init__(self, step: int, rollback_to: int, nonfinite: int,
+                 max_abs: float, rho0_scale: float):
+        self.step, self.rollback_to = step, rollback_to
+        self.nonfinite, self.max_abs = nonfinite, max_abs
+        self.rho0_scale = rho0_scale
+        super().__init__(
+            f"layout diverged at step {step} (nonfinite={nonfinite}, "
+            f"max|y|={max_abs:.3g}): rolled back to step {rollback_to}, "
+            f"lr scale now {rho0_scale:g}")
+
+
+class LayoutDivergedError(RuntimeError):
+    """The layout kept diverging after ``HealthConfig.max_rollbacks``
+    rollback/backoff attempts."""
+
+
+class InjectedFault(RuntimeError):
+    """The exception :class:`FaultInjector` raises for ``"exception"``
+    specs — catchable separately from real failures."""
+
+    def __init__(self, site: str, hit: int):
+        self.site, self.hit = site, hit
+        super().__init__(f"injected fault at site {site!r} (hit #{hit})")
+
+
+class FaultInjector:
+    """Deterministic fault injection at named sites.
+
+    ``plan`` maps a site name to ``{hit_index: spec}`` — the spec fires on
+    the ``hit_index``-th time (0-based) that site is reached.  Specs:
+
+    * ``"nan"``       — corrupt the site's payload: every float array in
+      it is filled with NaN (the payload is returned corrupted);
+    * ``"exception"`` — raise :class:`InjectedFault`;
+    * ``"kill"``      — ``SIGKILL`` the current process (no atexit, no
+      flushing — a real preemption, for subprocess kill/resume tests);
+    * a callable      — ``spec(payload) -> payload`` for targeted
+      corruption (e.g. NaN one row of a prefill block).
+
+    Sites fire via ``payload = injector.fire("site", payload)``; an
+    instance with an empty plan is inert (one dict lookup per site).
+    Every firing is recorded in ``log`` as ``(site, hit, kind)``.
+    """
+
+    def __init__(self, plan: Optional[dict] = None):
+        self.plan = dict(plan or {})
+        self.counts: dict = {}
+        self.log: list = []
+
+    def fire(self, site: str, payload=None):
+        hit = self.counts.get(site, 0)
+        self.counts[site] = hit + 1
+        spec = self.plan.get(site, {}).get(hit)
+        if spec is None:
+            return payload
+        if callable(spec):
+            self.log.append((site, hit, "callable"))
+            return spec(payload)
+        self.log.append((site, hit, spec))
+        if spec == "nan":
+            return _poison(payload)
+        if spec == "exception":
+            raise InjectedFault(site, hit)
+        if spec == "kill":
+            os.kill(os.getpid(), signal.SIGKILL)
+        raise ValueError(f"unknown fault spec {spec!r} at site {site!r}")
+
+
+def _poison(payload):
+    """Fill every inexact (float) array leaf of the payload with NaN."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    def bad(leaf):
+        if isinstance(leaf, np.ndarray) and np.issubdtype(
+                leaf.dtype, np.floating):
+            return np.full_like(leaf, np.nan)
+        if isinstance(leaf, jax.Array) and jnp.issubdtype(
+                leaf.dtype, jnp.floating):
+            return jnp.full_like(leaf, jnp.nan)
+        return leaf
+
+    return jax.tree.map(bad, payload)
 
 
 class PreemptionGuard:

@@ -1,0 +1,172 @@
+"""Fault-injected serving (PR 8): the ProjectionEngine under chaos.
+
+Why per-slot isolation is provable bitwise, not just approximately:
+every slot's positive/negative edge endpoints are CORPUS rows (frozen
+by the kernel's ``n_frozen`` masking) — slots never touch each other's
+rows; randomness is threefry counter-derived per element, so one slot's
+values cannot perturb another slot's draws; and submit-time quarantine
+keeps poisoned requests out of the queue entirely, so slot assignment
+and the key stream match a healthy-only run exactly.  The parity tests
+below therefore assert ``array_equal``, not ``allclose``.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.largevis_default import LargeVisConfig
+from repro.core.largevis import largevis
+from repro.launch.serve_projection import (ProjectionEngine, ProjectRequest,
+                                           QueueFullError)
+from repro.runtime.fault_tolerance import FaultInjector
+
+N, D = 400, 16
+CFG = LargeVisConfig(n_neighbors=8, n_trees=2, n_explore_iters=1, window=16,
+                     perplexity=6.0, samples_per_node=200, batch_size=128,
+                     steps_per_dispatch=20, transform_steps=12)
+
+
+@pytest.fixture(scope="module")
+def model():
+    x = np.random.default_rng(0).normal(size=(N, D)).astype(np.float32)
+    return largevis(x, jax.random.key(7), cfg=CFG)
+
+
+def _queries(q=16, seed=5):
+    return np.random.default_rng(seed).normal(size=(q, D)).astype(np.float32)
+
+
+def _drain(model, reqs, **engine_kw):
+    eng = ProjectionEngine(model, slots=8, seed=3, **engine_kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# quarantine + parity
+# ---------------------------------------------------------------------------
+
+def test_poisoned_queries_quarantined_healthy_bitwise_unaffected(model):
+    """Interleave NaN queries with healthy ones: the bad ones complete
+    with errors in ``quarantined``; every healthy request's coordinates
+    are bitwise what a fault-free, healthy-only run produces."""
+    q = _queries(12)
+    ref = _drain(model, [ProjectRequest(rid=i, x=q[i]) for i in range(12)])
+    ref_y = {r.rid: r.y for r in ref.completed}
+    assert len(ref_y) == 12 and not ref.quarantined
+
+    eng = ProjectionEngine(model, slots=8, seed=3)
+    bad_rids = []
+    for i in range(12):
+        assert eng.submit(ProjectRequest(rid=i, x=q[i]))
+        if i % 3 == 0:          # interleave poison between healthy traffic
+            bad = ProjectRequest(rid=100 + i,
+                                 x=np.full(D, np.nan, np.float32))
+            assert not eng.submit(bad)      # rejected at the door
+            bad_rids.append(bad.rid)
+    eng.run()
+    assert sorted(r.rid for r in eng.quarantined) == bad_rids
+    assert all(r.error is not None and r.y is None
+               for r in eng.quarantined)
+    assert len(eng.completed) == 12
+    for r in eng.completed:
+        assert np.array_equal(r.y, ref_y[r.rid]), r.rid
+
+
+def test_wrong_dim_query_quarantined(model):
+    eng = ProjectionEngine(model, slots=4)
+    assert not eng.submit(ProjectRequest(rid=0, x=np.zeros(D + 3,
+                                                           np.float32)))
+    assert eng.quarantined[0].error and "dim" in eng.quarantined[0].error
+
+
+def test_corpus_bitwise_frozen_under_chaos(model):
+    """Slot-row corruption injected mid-flight cannot leak into the
+    fitted corpus: corpus rows are bitwise-identical after a chaotic
+    drain (kernel n_frozen masking + slot edge structure)."""
+    corpus_before = np.asarray(model.y).copy()
+
+    def corrupt_slots(y_full):
+        # NaN two slot rows directly in the resident embedding
+        return y_full.at[N + 2].set(np.nan).at[N + 5].set(np.nan)
+
+    fi = FaultInjector({"step": {4: corrupt_slots, 9: "exception"}})
+    eng = _drain(model, [ProjectRequest(rid=i, x=x)
+                         for i, x in enumerate(_queries(20))], fault=fi)
+    assert np.array_equal(np.asarray(eng.y_full[:N]), corpus_before)
+    assert eng.faults_retried == 1
+    # the two corrupted slots' requests were quarantined at retire with
+    # a divergence error, everything else completed
+    assert all("non-finite" in r.error for r in eng.quarantined)
+    assert len(eng.completed) + len(eng.quarantined) == 20
+
+
+def test_step_exception_retry_is_bitwise_transparent(model):
+    """An injected step exception is retried by run() with zero state
+    drift — final coordinates bitwise match a fault-free drain."""
+    q = _queries(10)
+    ref = _drain(model, [ProjectRequest(rid=i, x=q[i]) for i in range(10)])
+    fi = FaultInjector({"step": {0: "exception", 5: "exception"}})
+    eng = _drain(model, [ProjectRequest(rid=i, x=q[i]) for i in range(10)],
+                 fault=fi)
+    assert eng.faults_retried == 2
+    ref_y = {r.rid: r.y for r in ref.completed}
+    assert len(eng.completed) == 10
+    for r in eng.completed:
+        assert np.array_equal(r.y, ref_y[r.rid])
+
+
+def test_prefill_corruption_contained_to_its_slot(model):
+    """NaN one admitted row's init coords: only that request retires
+    with an error; co-admitted requests complete bitwise-clean."""
+    q = _queries(6)
+    ref = _drain(model, [ProjectRequest(rid=i, x=q[i]) for i in range(6)])
+    ref_y = {r.rid: r.y for r in ref.completed}
+
+    def poison_row0(payload):
+        nn_idx, p_log, y0 = payload
+        return nn_idx, p_log, y0.at[0].set(np.nan)
+
+    fi = FaultInjector({"prefill": {0: poison_row0}})
+    eng = _drain(model, [ProjectRequest(rid=i, x=q[i]) for i in range(6)],
+                 fault=fi)
+    assert [r.rid for r in eng.quarantined] == [0]
+    assert "non-finite" in eng.quarantined[0].error
+    assert sorted(r.rid for r in eng.completed) == [1, 2, 3, 4, 5]
+    for r in eng.completed:
+        assert np.array_equal(r.y, ref_y[r.rid])
+
+
+# ---------------------------------------------------------------------------
+# budgets + backpressure
+# ---------------------------------------------------------------------------
+
+def test_slot_step_budget_retires_stuck_slot(model):
+    """A slot that cannot finish inside its budget is force-retired with
+    an error instead of pinning the slot forever (self-healing)."""
+    eng = ProjectionEngine(model, slots=4, seed=3, slot_step_budget=5)
+    assert eng.slot_step_budget < eng.steps     # guaranteed to trip
+    for i, x in enumerate(_queries(4)):
+        eng.submit(ProjectRequest(rid=i, x=x))
+    eng.run()
+    assert len(eng.quarantined) == 4
+    assert all("budget" in r.error for r in eng.quarantined)
+    assert all(r is None for r in eng.requests)     # slots freed
+
+
+def test_default_budget_never_trips_healthy_traffic(model):
+    eng = _drain(model, [ProjectRequest(rid=i, x=x)
+                         for i, x in enumerate(_queries(30))])
+    assert not eng.quarantined and len(eng.completed) == 30
+
+
+def test_queue_backpressure(model):
+    eng = ProjectionEngine(model, slots=2, max_queue=3)
+    for i in range(3):
+        eng.submit(ProjectRequest(rid=i, x=_queries(1)[0]))
+    with pytest.raises(QueueFullError):
+        eng.submit(ProjectRequest(rid=99, x=_queries(1)[0]))
+    eng.run()                                   # drains fine afterwards
+    assert len(eng.completed) == 3

@@ -48,10 +48,15 @@ for s in range(1, 200):
     ck.save({str(tmp_path)!r}, s, t)
 """
     proc = subprocess.Popen([sys.executable, "-c", code])
-    time.sleep(6.0)
+    from repro.checkpoint import checkpointer as ck
+    # wait for the first commit (import + backend init are box-speed
+    # dependent), then give the loop a beat so the kill lands mid-save
+    deadline = time.time() + 60.0
+    while not ck.all_steps(tmp_path) and time.time() < deadline:
+        time.sleep(0.1)
+    time.sleep(1.5)
     proc.kill()
     proc.wait()
-    from repro.checkpoint import checkpointer as ck
     steps = ck.all_steps(tmp_path)
     assert steps, "no committed checkpoint at all"
     # every committed checkpoint must restore cleanly

@@ -1,0 +1,238 @@
+"""Crash-safe resume (PR 8): kill the pipeline at every stage boundary
+and mid-layout, restart the SAME call, and require the final embedding
+to be **bitwise-equal** to an uninterrupted run.
+
+Why bitwise is attainable: every stage is a pure function of
+``(x, key, cfg)``, layout steps derive their randomness from
+``fold_in(kr, step_id)``, the lr positions are host-side ``t/steps``
+fractions, and checkpoints round-trip f32 exactly — so resuming at a
+chunk boundary replays the identical trajectory (DESIGN.md; the scan
+engine's resume hook has been bitwise-pinned since PR 4).
+
+Three rings of coverage:
+
+* in-process matrix (tier-1) — ``InjectedFault("exception")`` at every
+  site, resume in the same process; fast because compiled fns are hot.
+* one REAL ``SIGKILL`` subprocess round trip (tier-1) — no atexit, no
+  flushing, mid-layout; the genuinely-crashed case.
+* the full subprocess kill matrix, incl. ``distributed=True`` on a
+  forced 4-device host mesh (``slow`` + ``chaos`` markers, nightly).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.largevis_default import (CheckpointConfig, HealthConfig,
+                                            LargeVisConfig)
+from repro.core.largevis import largevis
+from repro.runtime.fault_tolerance import FaultInjector, InjectedFault
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+N, D = 384, 16
+CFG = LargeVisConfig(n_neighbors=8, n_trees=2, n_explore_iters=1, window=16,
+                     perplexity=6.0, samples_per_node=120, batch_size=64,
+                     steps_per_dispatch=10)
+
+
+def _x():
+    return np.random.default_rng(0).normal(size=(N, D)).astype(np.float32)
+
+
+def _ckpt_cfg(tmp_path, base=CFG, **kw):
+    return dataclasses.replace(
+        base, checkpoint=CheckpointConfig(directory=str(tmp_path / "ckpt"),
+                                          every_chunks=1, **kw))
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    """Uninterrupted fit (no checkpointing) — the bitwise oracle."""
+    return np.asarray(largevis(_x(), jax.random.key(7), cfg=CFG).y)
+
+
+# ---------------------------------------------------------------------------
+# in-process crash matrix (exception faults; fast)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("site,hit", [
+    ("stage:graph", 0),
+    ("stage:weights", 0),
+    ("stage:samplers", 0),
+    ("layout_saved", 0),         # after the first layout chunk committed
+    ("layout_saved", 2),         # mid-layout
+])
+def test_resume_bitwise_after_crash(tmp_path, baseline, site, hit):
+    cfg = _ckpt_cfg(tmp_path)
+    with pytest.raises(InjectedFault):
+        largevis(_x(), jax.random.key(7), cfg=cfg,
+                 fault=FaultInjector({site: {hit: "exception"}}))
+    r = largevis(_x(), jax.random.key(7), cfg=cfg)
+    assert np.array_equal(np.asarray(r.y), baseline)
+
+
+def test_resume_skips_completed_stages(tmp_path, baseline, monkeypatch):
+    """The restarted run RESTORES prior stages instead of recomputing:
+    after a crash past the samplers boundary, the rerun must finish even
+    with the graph/weights/sampler builders ripped out."""
+    import sys
+    lv = sys.modules["repro.core.largevis"]   # the module, not the function
+    cfg = _ckpt_cfg(tmp_path)
+    with pytest.raises(InjectedFault):
+        largevis(_x(), jax.random.key(7), cfg=cfg,
+                 fault=FaultInjector({"stage:samplers": {0: "exception"}}))
+
+    def boom(*a, **kw):
+        raise AssertionError("stage recomputed despite a valid checkpoint")
+
+    monkeypatch.setattr(lv.knn_lib, "build_knn_graph", boom)
+    monkeypatch.setattr(lv.perp_lib, "edge_weights", boom)
+    monkeypatch.setattr(lv.sampler_lib, "build_edge_sampler", boom)
+    r = largevis(_x(), jax.random.key(7), cfg=cfg)
+    assert np.array_equal(np.asarray(r.y), baseline)
+
+
+def test_fingerprint_rejects_foreign_checkpoint(tmp_path, baseline):
+    """A checkpoint directory written by a DIFFERENT run (other data/key)
+    is refused with a warning and every stage recomputes — resuming it
+    would silently mix two runs' states."""
+    cfg = _ckpt_cfg(tmp_path)
+    other_x = np.random.default_rng(9).normal(size=(N, D)).astype(np.float32)
+    largevis(other_x, jax.random.key(7), cfg=cfg)          # fills the dir
+    with pytest.warns(RuntimeWarning, match="different run"):
+        r = largevis(_x(), jax.random.key(7), cfg=cfg)
+    assert np.array_equal(np.asarray(r.y), baseline)
+
+
+def test_resume_false_ignores_checkpoints(tmp_path, baseline):
+    cfg = _ckpt_cfg(tmp_path)
+    largevis(_x(), jax.random.key(7), cfg=cfg)
+    cfg_no = _ckpt_cfg(tmp_path, resume=False)
+    r = largevis(_x(), jax.random.key(7), cfg=cfg_no)      # full recompute
+    assert np.array_equal(np.asarray(r.y), baseline)
+
+
+def test_completed_run_resumes_to_same_result(tmp_path, baseline):
+    """Rerunning after a SUCCESSFUL checkpointed fit just reloads the
+    final layout — same bits, near-zero layout time."""
+    cfg = _ckpt_cfg(tmp_path)
+    largevis(_x(), jax.random.key(7), cfg=cfg)
+    r = largevis(_x(), jax.random.key(7), cfg=cfg)
+    assert np.array_equal(np.asarray(r.y), baseline)
+
+
+# ---------------------------------------------------------------------------
+# real SIGKILL in a subprocess (no cleanup, no flushing)
+# ---------------------------------------------------------------------------
+
+_WORKER = r"""
+import os, sys
+if os.environ.get("RESUME_DIST") == "1":
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+sys.path.insert(0, SRC)
+import dataclasses
+import numpy as np, jax
+from repro.configs.largevis_default import LargeVisConfig, CheckpointConfig
+from repro.core.largevis import largevis
+from repro.runtime.fault_tolerance import FaultInjector
+
+dist = os.environ.get("RESUME_DIST") == "1"
+extra = dict(distributed=True, data_shards=4, sync_every=8) if dist else {}
+cfg = LargeVisConfig(n_neighbors=8, n_trees=2, n_explore_iters=1, window=16,
+                     perplexity=6.0, samples_per_node=120, batch_size=64,
+                     steps_per_dispatch=10, **extra)
+if os.environ.get("RESUME_CKPT"):
+    cfg = dataclasses.replace(cfg, checkpoint=CheckpointConfig(
+        directory=os.environ["RESUME_CKPT"], every_chunks=1))
+x = np.random.default_rng(0).normal(size=(384, 16)).astype(np.float32)
+site = os.environ.get("RESUME_SITE")
+fault = (FaultInjector({site: {int(os.environ["RESUME_HIT"]): "kill"}})
+         if site else None)
+res = largevis(x, jax.random.key(7), cfg=cfg, fault=fault)
+np.save(os.environ["RESUME_OUT"], np.asarray(res.y))
+print("WORKER_DONE")
+"""
+
+
+def _run_worker(tmp_path, out_name, *, site=None, hit=0, ckpt=None,
+                dist=False):
+    env = dict(os.environ,
+               RESUME_OUT=str(tmp_path / out_name),
+               RESUME_SITE=site or "", RESUME_HIT=str(hit),
+               RESUME_CKPT=str(ckpt) if ckpt else "",
+               RESUME_DIST="1" if dist else "")
+    env.pop("XLA_FLAGS", None)
+    script = _WORKER.replace("SRC", repr(os.path.join(REPO, "src")))
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600)
+
+
+def _kill_resume_roundtrip(tmp_path, *, site, hit, dist=False):
+    ckpt = tmp_path / "ckpt"
+    killed = _run_worker(tmp_path, "na.npy", site=site, hit=hit, ckpt=ckpt,
+                         dist=dist)
+    assert killed.returncode == -9, (killed.returncode, killed.stderr[-2000:])
+    resumed = _run_worker(tmp_path, "resumed.npy", ckpt=ckpt, dist=dist)
+    assert resumed.returncode == 0, resumed.stderr[-2000:]
+    clean = _run_worker(tmp_path, "clean.npy", dist=dist)
+    assert clean.returncode == 0, clean.stderr[-2000:]
+    y_resumed = np.load(tmp_path / "resumed.npy")
+    y_clean = np.load(tmp_path / "clean.npy")
+    assert np.array_equal(y_resumed, y_clean)
+
+
+def test_sigkill_mid_layout_resume_bitwise(tmp_path):
+    """Tier-1 representative: a REAL SIGKILL two committed layout chunks
+    in, restart, bitwise-equal to an uninterrupted subprocess run."""
+    _kill_resume_roundtrip(tmp_path, site="layout_saved", hit=2)
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+@pytest.mark.parametrize("site,hit", [
+    ("stage:graph", 0), ("stage:weights", 0), ("stage:samplers", 0),
+    ("layout_saved", 0),
+])
+def test_sigkill_matrix_single_device(tmp_path, site, hit):
+    _kill_resume_roundtrip(tmp_path, site=site, hit=hit)
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+@pytest.mark.parametrize("site,hit", [
+    ("stage:graph", 0), ("stage:weights", 0),
+    ("layout_round", 1), ("layout_saved", 1),
+])
+def test_sigkill_matrix_distributed(tmp_path, site, hit):
+    """Kill/resume on the 4-device local-SGD path: the layout checkpoint
+    is cut at a sync boundary where every replica is bitwise-identical,
+    so the re-broadcast resume continues the exact distributed run."""
+    _kill_resume_roundtrip(tmp_path, site=site, hit=hit, dist=True)
+
+
+# ---------------------------------------------------------------------------
+# mid-save crash: a torn checkpoint write is invisible
+# ---------------------------------------------------------------------------
+
+def test_torn_layout_checkpoint_is_ignored(tmp_path, baseline):
+    """Simulate a crash inside a checkpoint write (tmp dir present, no
+    _COMMITTED rename): the resume must fall back to the previous
+    committed chunk and still land bitwise on the oracle."""
+    cfg = _ckpt_cfg(tmp_path, keep=3)
+    with pytest.raises(InjectedFault):
+        largevis(_x(), jax.random.key(7), cfg=cfg,
+                 fault=FaultInjector({"layout_saved": {2: "exception"}}))
+    layout_dir = tmp_path / "ckpt" / "layout"
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in layout_dir.glob("step_*"))
+    # tear the newest committed save: as if the rename never happened
+    newest = layout_dir / f"step_{steps[-1]}"
+    (newest / "_COMMITTED").unlink()
+    r = largevis(_x(), jax.random.key(7), cfg=cfg)
+    assert np.array_equal(np.asarray(r.y), baseline)
