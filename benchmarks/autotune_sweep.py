@@ -1,0 +1,252 @@
+"""Autotuner sweep bench: autotuned vs hardcoded tiles, per kernel cell.
+
+For each kernel x shape cell this bench (1) runs the runtime autotuner's
+sweep for that cell (``repro.runtime.autotune.sweep`` — interleaved
+best-of-3 shortlist, paired best-of-8 adopt rule), then (2) re-times the
+adopted config against the legacy hardcoded config in a fresh **paired
+interleaved best-of-8** on the bench's own inputs, and (3) reports the
+achieved-vs-roofline fraction of the tuned dispatch (flops/bytes from
+XLA ``cost_analysis`` on the lowered module, machine peaks measured —
+see benchmarks/roofline.py).
+
+Two artifacts with row-for-row matching names:
+
+* ``BENCH_autotune.json`` — the autotuned timings (plus per-row
+  ``speedup``, chosen ``config`` and ``roofline_fraction``).
+* ``BENCH_autotune_hardcoded.json`` — the same cells at the legacy
+  hardcoded configs.
+
+The CI gate compares the two FRESH artifacts against each other
+(autotuned must never be > 1.1x slower than hardcoded on any cell —
+the adopt rule keeps the default on ties, so an autotuned loss beyond
+noise means the tuner itself regressed), not fresh-vs-committed wall
+clock, so the gate is robust to CI-runner speed.  ``--tiny`` is that CI
+smoke mode (reduced shapes, ``autotune_tiny`` tables).
+
+``--write-defaults`` additionally refreshes the committed in-repo
+default table (``src/repro/runtime/autotune_defaults.json``) from the
+sweep results — run on the reference box, never in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import AUTOTUNE_REPEATS, Rows, best_of_interleaved
+from repro.core import neighbor_explore as ne
+from repro.core import perplexity
+from repro.kernels import ops, ref
+from repro.runtime import autotune
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str                 # row name
+    kernel: str               # autotune kernel key
+    shape: dict               # autotune shape dict (bucketed for the key)
+    default: dict             # legacy hardcoded config for this call site
+    make_fn: object           # cfg -> (fn, args): the measured dispatch
+    # knobs pinned for BOTH configs of this cell (e.g. y_tile, so a
+    # tiled-mode cell compares edge tiles within the tiled kernel); the
+    # sweep itself runs un-pinned on the shared shape bucket
+    force: dict = dataclasses.field(default_factory=dict)
+
+
+def build_cells(tiny: bool) -> list[Cell]:
+    """The repo's tuned call sites at representative (or CI-tiny) shapes.
+
+    Every ``make_fn`` closes only over python scalars — arrays are
+    returned as explicit args so ``roofline.cost_of`` can lower them as
+    parameters (closure arrays constant-fold; see roofline.py)."""
+    cells = []
+    key = jax.random.key(42)
+
+    # --- topk_sqdist: the brute-force KNN dispatch (fig2 shape) ---------
+    m = 2000 if tiny else 6000
+    d, k = (32, 20) if tiny else (100, 50)
+    ka, _ = jax.random.split(key)
+    x = jax.random.normal(ka, (m, d), jnp.float32)
+
+    def topk_fn(cfg):
+        def fn(a, b):
+            return ops.topk_sqdist(a, b, k, **cfg)
+        return fn, (x, x)
+
+    cells.append(Cell("topk_bf", "topk_sqdist", dict(m=m, n=m, d=d, k=k),
+                      autotune.legacy_default("topk_sqdist"), topk_fn))
+
+    # --- knn_window_fold: the forest window dispatch --------------------
+    w = 256 if tiny else 1024
+    kw_ = min(k, w - 1)
+    kc, kd = jax.random.split(jax.random.key(43))
+    aw = jax.random.normal(kc, (w, d), jnp.float32)
+    bw = jnp.concatenate(
+        [aw, jax.random.normal(kd, (2 * w, d), jnp.float32)])
+    a_ids = jnp.arange(w, dtype=jnp.int32)
+    b_ids = jnp.arange(3 * w, dtype=jnp.int32)
+    init_i = jnp.full((w, kw_), -1, jnp.int32)
+    init_d = jnp.full((w, kw_), ref.INVALID_DIST, jnp.float32)
+
+    def window_fn(cfg):
+        def fn(a, b, ii, dd):
+            return ops.topk_sqdist(a, b, kw_, a_ids=a_ids, b_ids=b_ids,
+                                   init_ids=ii, init_dists=dd, dedup=True,
+                                   bm=min(cfg["bm"], w),
+                                   bn=min(cfg["bn"], 3 * w))
+        return fn, (aw, bw, init_i, init_d)
+
+    cells.append(Cell("window_fold", "knn_window_fold",
+                      dict(w=w, k=kw_, d=d), dict(bm=w, bn=3 * w),
+                      window_fn))
+
+    # --- largevis_edge_step: the layout hot loop ------------------------
+    def edge_cell(name, n, b, mneg, force=None):
+        keys = jax.random.split(jax.random.key(44), 4)
+        y = jax.random.normal(keys[0], (n, 2), jnp.float32) * 1e-2
+        i = jax.random.randint(keys[1], (b,), 0, n, jnp.int32)
+        j = jax.random.randint(keys[2], (b,), 0, n, jnp.int32)
+        negs = jax.random.randint(keys[3], (b, mneg), 0, n, jnp.int32)
+        nm = ((negs != i[:, None])
+              & (negs != j[:, None])).astype(jnp.float32)
+
+        def fn_maker(cfg):
+            def fn(y_, i_, j_, negs_, nm_):
+                return ops.largevis_edge_step(y_, i_, j_, negs_, nm_, 0.5,
+                                              **cfg)
+            return fn, (y, i, j, negs, nm)
+
+        return Cell(name, "largevis_edge_step",
+                    dict(n=n, b=b, m=mneg, s=2),
+                    autotune.legacy_default("largevis_edge_step"), fn_maker,
+                    force=force or {})
+
+    if tiny:
+        cells.append(edge_cell("edge_step", 4000, 1024, 5))
+        cells.append(edge_cell("edge_step_ytile", 4000, 1024, 5,
+                               force=dict(y_tile=1000)))
+    else:
+        cells.append(edge_cell("edge_step", 20000, 4096, 8))
+        cells.append(edge_cell("edge_step_ytile", 20000, 4096, 8,
+                               force=dict(y_tile=5000)))
+
+    # --- symmetrize: the graph-weights reverse gather -------------------
+    n_sym = 8000 if tiny else 100_000
+    k_sym = 20 if tiny else 50
+    ks = jax.random.split(jax.random.key(45))
+    idx = jax.random.randint(ks[0], (n_sym, k_sym), 0, n_sym, jnp.int32)
+    p = jax.random.uniform(ks[1], (n_sym, k_sym), jnp.float32)
+
+    def sym_fn(cfg):
+        def fn(idx_, p_):
+            return perplexity.symmetrize(idx_, p_, tile=cfg["tile"])
+        return fn, (idx, p)
+
+    cells.append(Cell("symmetrize", "symmetrize", dict(n=n_sym, k=k_sym),
+                      autotune.legacy_default("symmetrize"), sym_fn))
+
+    # --- neighbor_explore: one un-sampled exploring round ---------------
+    n_ex = 2000 if tiny else 6000
+    k_ex = 10 if tiny else 20
+    kx, kr = jax.random.split(jax.random.key(46))
+    xe = jax.random.normal(kx, (n_ex, d), jnp.float32)
+    from repro.core.knn import brute_force_knn
+    eidx, edist = brute_force_knn(xe, k_ex)
+
+    def explore_fn(cfg):
+        tile = max(16, min(cfg["tile"], n_ex))
+
+        def fn(x_, idx_, dist_):
+            return ne._explore_round(x_, idx_, dist_, kr, sample=0,
+                                     tile=tile, r_cap=k_ex)
+        return fn, (xe, eidx, edist)
+
+    cells.append(Cell("explore", "neighbor_explore",
+                      dict(n=n_ex, k=k_ex, d=d),
+                      autotune.legacy_default("neighbor_explore"),
+                      explore_fn))
+    return cells
+
+
+def run(rows: Rows, rows_hard: Rows | None = None, *,
+        tiny: bool = False) -> None:
+    """Fill ``rows`` (autotuned) and the hardcoded companion.
+
+    ``rows_hard=None`` (the benchmarks/run.py single-``rows`` contract)
+    creates and SAVES the companion here, so the harness path still
+    produces both artifacts."""
+    from benchmarks import roofline
+    own_companion = rows_hard is None
+    if own_companion:
+        rows_hard = Rows(rows.table)
+    peaks = roofline.measure_peaks()
+    print(f"# peaks: {peaks['peak_flops'] / 1e9:.1f} GF/s, "
+          f"{peaks['mem_bw'] / 1e9:.1f} GB/s", file=sys.stderr)
+    swept: dict[str, dict] = {}        # bucket key -> config (cells share)
+    for cell in build_cells(tiny):
+        bkey = autotune.bucket_key(cell.kernel, cell.shape)
+        tuned = swept.get(bkey)
+        if tuned is None:
+            tuned = autotune.sweep(cell.kernel, cell.shape, cell.default)
+            swept[bkey] = tuned
+        cfg_def = {**cell.default, **cell.force}
+        cfg_tuned = {**cell.default, **tuned, **cell.force}
+        fn_d, args_d = cell.make_fn(cfg_def)
+        fn_t, args_t = cell.make_fn(cfg_tuned)
+        # the decision-grade paired comparison, on the bench's inputs
+        _, (t_def, t_tuned) = best_of_interleaved(
+            [lambda: fn_d(*args_d), lambda: fn_t(*args_t)],
+            AUTOTUNE_REPEATS)
+        cost = roofline.cost_of(fn_t, *args_t)
+        frac = roofline.fraction(cost, t_tuned, peaks)
+        derived = dict(config=json.dumps(cfg_tuned, sort_keys=True),
+                       speedup=round(t_def / max(t_tuned, 1e-12), 3))
+        if frac is not None:
+            derived["roofline_fraction"] = round(frac, 4)
+        if cost.get("flops") is not None:
+            derived["flops"] = cost["flops"]
+        if cost.get("bytes") is not None:
+            derived["bytes"] = cost["bytes"]
+        rows.add(cell.name, t_tuned, **derived)
+        rows_hard.add(cell.name, t_def,
+                      config=json.dumps(cfg_def, sort_keys=True))
+    if own_companion:
+        rows_hard.save(table=f"{rows.table}_hardcoded")
+
+
+def write_defaults() -> None:
+    """Refresh the committed default table from this box's sweep cache."""
+    backend = jax.default_backend()
+    entries = autotune._read_entries(autotune._cache_path(backend))
+    path = autotune._defaults_path()
+    doc = {"version": autotune.AUTOTUNE_VERSION, "backend": backend,
+           "jax": jax.__version__, "entries": entries}
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    print(f"# wrote {path} ({len(entries)} entries)", file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced shapes, autotune_tiny tables (CI smoke)")
+    ap.add_argument("--write-defaults", action="store_true",
+                    help="refresh src/repro/runtime/autotune_defaults.json "
+                         "from the sweep results (reference box only)")
+    args = ap.parse_args()
+    from repro.runtime import platform
+    platform.apply_bench_preset()
+    table = "autotune_tiny" if args.tiny else "autotune"
+    rows = Rows(table)
+    run(rows, tiny=args.tiny)
+    rows.print_csv()
+    rows.save()
+    if args.write_defaults:
+        write_defaults()
+
+
+if __name__ == "__main__":
+    main()

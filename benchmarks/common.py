@@ -11,9 +11,17 @@ from __future__ import annotations
 import json
 import os
 import pathlib
-import time
 
 import jax
+
+# timing helpers live in the installed package now (the autotuner shares
+# them); re-exported here so every bench module keeps its import path
+from repro.runtime.timing import (  # noqa: F401
+    AUTOTUNE_REPEATS,
+    _report_stragglers,
+    best_of_interleaved,
+    timed,
+)
 
 ART = pathlib.Path(os.environ.get(
     "BENCH_ARTIFACTS_DIR",
@@ -34,79 +42,6 @@ def dataset(name: str, n: int, key=None):
     raise KeyError(name)
 
 
-def _report_stragglers(watchdog, label: str):
-    """One stderr line when timed repeats hit load-spike outliers.
-
-    best-of timing already discards stragglers from the *numbers*; the
-    report makes the discard visible so a row measured during a load
-    spike is never mistaken for a clean one."""
-    if watchdog is not None and watchdog.stragglers:
-        import sys
-        worst = max(dt for _, dt, _ in watchdog.stragglers)
-        med = watchdog.stragglers[-1][2]
-        print(f"[bench] {label}: {len(watchdog.stragglers)} straggler "
-              f"repeat(s) (worst {worst:.3f}s vs median {med:.3f}s) — "
-              f"using best-of, but treat this row with suspicion",
-              file=sys.stderr)
-
-
-def best_of_interleaved(fns, repeats: int):
-    """Best-of-``repeats`` per fn, *alternating* fns every round.
-
-    Machine-load drift over tens of seconds is the dominant noise source
-    for comparison rows on a shared CPU; back-to-back repeats of one
-    config land entirely inside one load regime and make cross-config
-    ratios meaningless.  Interleaving spreads every config across the
-    same load windows, so the per-config minima are comparable.  Each fn
-    gets one untimed warmup call first (compile time never lands in a
-    number).  A per-fn :class:`~repro.runtime.fault_tolerance.Watchdog`
-    flags outlier repeats (load spikes) on stderr.  Returns
-    (outs, best_seconds), one entry per fn.
-    """
-    from repro.runtime.fault_tolerance import Watchdog
-    outs = [jax.block_until_ready(f()) for f in fns]   # warmup / compile
-    best = [float("inf")] * len(fns)
-    dogs = [Watchdog() for _ in fns]
-    for r in range(repeats):
-        for f_i, f in enumerate(fns):
-            t0 = time.time()
-            outs[f_i] = jax.block_until_ready(f())
-            dt = time.time() - t0
-            best[f_i] = min(best[f_i], dt)
-            dogs[f_i].observe(r, dt)
-    for f_i, dog in enumerate(dogs):
-        _report_stragglers(dog, f"fn[{f_i}]")
-    return outs, best
-
-
-def timed(fn, *args, repeats: int = 1, warmup: int = 1, **kw):
-    """(result, best_seconds) with jax block_until_ready.
-
-    ``warmup`` untimed calls run first so jit compilation never lands in
-    the timed repeats — with the old behaviour every ``repeats=1`` number
-    (all of fig2–fig7) measured compile time, not runtime.  Pass
-    ``warmup=0`` only when compilation is the thing being measured.
-    A :class:`~repro.runtime.fault_tolerance.Watchdog` over the repeats
-    reports load-spike outliers on stderr.
-    """
-    from repro.runtime.fault_tolerance import Watchdog
-    out = None
-    for _ in range(max(0, warmup)):
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
-    best = float("inf")
-    dog = Watchdog()
-    for r in range(repeats):
-        t0 = time.time()
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
-        dt = time.time() - t0
-        best = min(best, dt)
-        dog.observe(r, dt)
-    _report_stragglers(dog, getattr(fn, "__name__", "timed"))
-    return out, best
-
-
 class Rows:
     """Collect 'name,us_per_call,derived' CSV rows (run.py contract)."""
 
@@ -122,9 +57,13 @@ class Rows:
             d = json.dumps(derived, sort_keys=True) if derived else ""
             print(f"{name},{us:.1f},{d}")
 
-    def save(self):
+    def save(self, table: str | None = None):
+        # ``table`` overrides the artifact FILE name only — row names keep
+        # ``self.table`` so a companion artifact (e.g. the autotune bench's
+        # hardcoded-config baseline) matches the main table row-for-row
+        # under check_regression's name-based pairing
         ART.mkdir(parents=True, exist_ok=True)
-        path = ART / f"BENCH_{self.table}.json"
+        path = ART / f"BENCH_{table or self.table}.json"
         path.write_text(json.dumps(
             [dict(name=n, us=u, **d) for n, u, d in self.rows], indent=1))
         return path

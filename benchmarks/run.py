@@ -22,6 +22,7 @@ TABLES = [
     ("fig6_scaling", "benchmarks.fig6_scaling"),
     ("fig7_sensitivity", "benchmarks.fig7_sensitivity"),
     ("serve_latency", "benchmarks.serve_latency"),
+    ("autotune", "benchmarks.autotune_sweep"),
 ]
 
 
@@ -29,6 +30,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
+    # declared-environment preset (flag hygiene) before any kernel compiles
+    from repro.runtime import platform
+    platform.apply_bench_preset()
     import importlib
     t_all = time.time()
     failures = []

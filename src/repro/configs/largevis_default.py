@@ -100,12 +100,22 @@ class RoutingConfig:
                                               paper's linear RP-forest +
                                               neighbor-exploring build
                                               (the fig6 scaling config)
+    ``autotune``    auto | off|cache|sweep    kernel tile autotuner mode
+                                              (``runtime.autotune``):
+                                              ``auto`` leaves the AUTOTUNE
+                                              env (default ``cache``) in
+                                              charge; ``off`` pins every
+                                              tile to the legacy hard-coded
+                                              config (bitwise CI anchor);
+                                              ``sweep`` measures cache
+                                              misses and persists winners
     ==============  ========================  ================================
     """
     knn: str = "auto"
     sampler: str = "auto"
     layout_step: str = "auto"
     knn_stage: str = "auto"
+    autotune: str = "auto"
 
 
 class _ResolvedStr(str):

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.kernels import ops
 from repro.kernels import ref as ref_lib
+from repro.runtime import autotune
 
 INF = jnp.float32(3.4e38)
 
@@ -49,21 +50,23 @@ INF = jnp.float32(3.4e38)
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("k", "tile", "impl"))
-def brute_force_knn(x: jax.Array, k: int, *, tile: int = 2048,
+def brute_force_knn(x: jax.Array, k: int, *, tile: int | None = None,
                     impl: str = "auto"):
     """Exact KNN.  Returns (idx (N,k) int32, sqdist (N,k) f32).
 
     One fused dispatch: ``ops.topk_sqdist(x, x, k)`` streams column tiles
     of the point set into a running top-k per row tile — the (t, N)
     distance buffer of the old materialize-then-top_k formulation never
-    exists.  ``tile`` is the row-tile height (bm); self-edges are masked
-    in-fold via a_ids == b_ids.
+    exists.  ``tile`` forces the row-tile height (bm); the default None
+    leaves bm/bn to the ops-layer autotuner (whose ``AUTOTUNE=off``
+    fallback is the same bm=2048 this wrapper used to hard-code).
+    Self-edges are masked in-fold via a_ids == b_ids.
     """
     N, d = x.shape
     k = min(int(k), N - 1)
     ids = jnp.arange(N, dtype=jnp.int32)
-    return ops.topk_sqdist(x, x, k, a_ids=ids, b_ids=ids,
-                           bm=min(tile, N), impl=impl)
+    kw = {} if tile is None else dict(bm=min(int(tile), N))
+    return ops.topk_sqdist(x, x, k, a_ids=ids, b_ids=ids, impl=impl, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -166,6 +169,12 @@ def _window_fold_one_tree(x: jax.Array, code: jax.Array, k: int,
     """
     N, d = x.shape
     W = min(window, N)
+    # the structural tiling (bm=W row blocks against their 3W
+    # neighborhood) is only the default — the fold is correct for any
+    # bm <= W / bn <= 3W, so the sub-tiling is autotunable (resolved at
+    # trace time; W is static here)
+    tcfg = autotune.get("knn_window_fold", dict(w=W, k=k, d=d),
+                        dict(bm=W, bn=3 * W))
     order = jnp.argsort(code).astype(jnp.int32)           # (N,) sorted->orig
     Np = int(np.ceil(N / W)) * W
     pad = Np - N
@@ -194,7 +203,7 @@ def _window_fold_one_tree(x: jax.Array, code: jax.Array, k: int,
         return ops.topk_sqdist(
             blocks[j], bx, k, a_ids=ids[j], b_ids=bid,
             init_ids=rows[0], init_dists=rd[0], dedup=True,
-            bm=W, bn=3 * W, impl=impl)
+            bm=min(tcfg["bm"], W), bn=min(tcfg["bn"], 3 * W), impl=impl)
 
     cid, cd = jax.lax.map(block_fold, jnp.arange(nb))
     flat_ids = cid.reshape(Np, k)[:N]

@@ -89,6 +89,18 @@ class LargeVisResult:
     key: jax.Array | None = None         # top-level fit key (pre-split)
 
 
+def _apply_autotune_mode(cfg: LargeVisConfig) -> None:
+    """Honor ``cfg.routing.autotune`` for this process.
+
+    ``"auto"`` restores env control (the AUTOTUNE variable, default
+    ``cache``); anything else pins the mode.  ``set_mode`` clears the jit
+    caches only on an actual change, so repeated fits with the same
+    setting pay nothing."""
+    m = getattr(getattr(cfg, "routing", None), "autotune", "auto")
+    from repro.runtime import autotune
+    autotune.set_mode(None if m in ("auto", None) else m)
+
+
 def _data_mesh(cfg: LargeVisConfig):
     """The 1-D "data" mesh every distributed stage shares."""
     from repro.launch.mesh import make_data_mesh
@@ -130,6 +142,7 @@ def build_graph(x, key, *, cfg: LargeVisConfig | None = None, fault=None):
     ``fault`` fires at sites ``stage:graph`` / ``stage:weights`` after
     each boundary commits (the kill-matrix hook)."""
     cfg = cfg if cfg is not None else LargeVisConfig()
+    _apply_autotune_mode(cfg)
     ckpt = _stage_ckpt(x, key, cfg)
     idx = dist = w = None
     if ckpt is not None:
@@ -206,6 +219,7 @@ def layout_graph(knn_idx, weights, key, *, cfg: LargeVisConfig | None = None,
     granularity.  ``fault`` fires ``stage:samplers`` after the boundary
     commits and threads into the layout driver."""
     cfg = cfg if cfg is not None else LargeVisConfig()
+    _apply_autotune_mode(cfg)
     ckpt = None if cfg.distributed else _stage_ckpt(weights, key, cfg)
     edge_s = neg_s = None
     if ckpt is not None:
@@ -280,6 +294,7 @@ def largevis(x, key=None, *, cfg: LargeVisConfig | None = None,
     :class:`~repro.runtime.fault_tolerance.FaultInjector` for those tests.
     """
     cfg = cfg if cfg is not None else LargeVisConfig()
+    _apply_autotune_mode(cfg)
     if key is None:
         key = jax.random.key(cfg.seed)
     kg, kl = jax.random.split(key)

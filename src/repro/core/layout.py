@@ -362,7 +362,11 @@ def run_layout(key, edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
     start = min(int(start_step), steps)
     kwargs = _step_kwargs(edge_sampler, neg_sampler, n_nodes, cfg, batch)
 
-    H = int(getattr(cfg, "steps_per_dispatch", 0))
+    # 0 = unset: ask the autotuner for a tuned scan-chunk length (the
+    # "layout_chunk" cell — results-neutral, see layout_engine.dispatch_steps)
+    H = layout_engine.dispatch_steps(
+        int(getattr(cfg, "steps_per_dispatch", 0)),
+        n_nodes=n_nodes, batch=batch)
     watchdog = None
     if callback is None and H > 1:
         # block on every chunk only when something already needs the sync;

@@ -53,6 +53,26 @@ STATIC_ARGNAMES = (
 )
 
 
+def dispatch_steps(requested: int, *, n_nodes: int, batch: int) -> int:
+    """Resolve the scan-chunk length (steps per device dispatch).
+
+    ``requested`` (``cfg.steps_per_dispatch``) wins when positive; 0/None
+    asks the autotuner for the "layout_chunk" cell — a cache/table-only
+    tunable (no sweep builder: measuring it needs a full layout driver
+    per candidate, which the fig6/table2 benches already do end to end).
+    Chunking is results-neutral: the (key, lr) stream is precomputed per
+    global step id, so any chunking yields the same trajectory.
+    Returns 0 when neither source picks (drivers keep their own default).
+    """
+    if requested:
+        return int(requested)
+    from repro.runtime import autotune
+    # off mode (and any miss) returns the sentinel 0 = "no opinion"
+    cfg = autotune.get("layout_chunk", dict(n=n_nodes, b=batch),
+                       dict(steps=0))
+    return int(cfg["steps"])
+
+
 def apply_edge_batch(
     y,
     i,

@@ -215,14 +215,18 @@ def _explore_rows_round(x, knn_idx, knn_dist, rows, ikey, *, sample: int,
 
 
 def neighbor_explore(x, knn_idx, knn_dist, *, iters: int = 1,
-                     sample: int = 0, key=None, tile: int = 1024,
+                     sample: int = 0, key=None, tile: int | None = None,
                      r_cap: int = 0, rows=None):
     """Refine (knn_idx, knn_dist) for ``iters`` rounds.
 
     sample=0 explores the full candidate set (paper-faithful); tile bounds
-    the (tile, K^2, d) gather — shrink it for large K/d.  Each iteration
-    is one jitted dispatch (``_explore_round``); the graph feeds back
-    between iterations.
+    the (tile, K^2, d) gather — shrink it for large K/d.  The default
+    None resolves tile through the autotuner, but ONLY when sample == 0:
+    with sampling on, the per-tile ``fold_in`` key stream makes the tile
+    size part of the result, so the tuner must never touch it (the
+    results-preservation contract in ``runtime/autotune.py``) and the
+    legacy 1024 is used.  Each iteration is one jitted dispatch
+    (``_explore_round``); the graph feeds back between iterations.
 
     ``rows`` (optional int32 array of row indices) restricts exploring to
     those rows — the incremental-insert repair mode: candidate generation
@@ -236,6 +240,13 @@ def neighbor_explore(x, knn_idx, knn_dist, *, iters: int = 1,
     n_rows = N if rows is None else int(rows.shape[0])
     if n_rows == 0:
         return knn_idx, knn_dist
+    if tile is None:
+        tile = 1024
+        if sample == 0:          # tile is results-neutral only un-sampled
+            from repro.runtime import autotune
+            tile = autotune.get(
+                "neighbor_explore", dict(n=n_rows, k=K, d=x.shape[1]),
+                autotune.legacy_default("neighbor_explore"))["tile"]
     # keep the per-tile gather under ~256 MB f32
     budget = 64 * (1 << 20)
     tile = max(16, min(tile, n_rows,

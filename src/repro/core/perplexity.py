@@ -123,8 +123,18 @@ def _symmetrize_scan(knn_idx: jax.Array, p: jax.Array, *,
 
 
 def symmetrize(knn_idx: jax.Array, p: jax.Array, *,
-               tile: int = 4096) -> jax.Array:
-    """w_ij = (p_{j|i} + p_{i|j}) / (2N) per directed edge slot (Eqn 2)."""
+               tile: int | None = None) -> jax.Array:
+    """w_ij = (p_{j|i} + p_{i|j}) / (2N) per directed edge slot (Eqn 2).
+
+    ``tile`` (row-tile of the scanned reverse gather) defaults to the
+    autotuner's choice — the reverse weights are identical for any tile
+    grouping (see ``_reverse_rows_scan``), so this is purely a
+    performance knob.  ``AUTOTUNE=off`` reproduces the legacy 4096."""
+    if tile is None:
+        from repro.runtime import autotune
+        N, K = knn_idx.shape
+        tile = autotune.get("symmetrize", dict(n=N, k=K),
+                            autotune.legacy_default("symmetrize"))["tile"]
     return _symmetrize_scan(knn_idx, p, tile=int(min(tile, knn_idx.shape[0])))
 
 

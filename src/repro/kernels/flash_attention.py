@@ -16,6 +16,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.largevis_grad import _resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -68,9 +70,15 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 @functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block",
                                              "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 256,
-                    kv_block: int = 256, interpret: bool = True):
+                    kv_block: int = 256, interpret: bool | None = None):
     """q: (B,S,H,hd); k/v: (B,T,H,hd) — heads must be pre-broadcast (GQA
-    callers repeat kv heads).  Returns (B,S,H,hd)."""
+    callers repeat kv heads).  Returns (B,S,H,hd).
+
+    ``interpret=None`` resolves backend-aware (compiled on TPU, interpret
+    elsewhere) — the same ``_resolve_interpret`` contract every other
+    kernel in this package follows; the old hard-coded ``True`` silently
+    ran the interpreter on TPU."""
+    interpret = _resolve_interpret(interpret)
     B, S, H, hd = q.shape
     T = k.shape[1]
     q_block = min(q_block, S)

@@ -23,11 +23,26 @@ match bitwise (see ``ref.fused_edge_step_ref`` for the order contract).
 
 In-place: y is aliased input->output via ``input_output_aliases``, so no
 second (N, s) buffer and no materialized (B, M, s) HBM intermediates exist
-outside the kernel.  y's block spec is the full array, i.e. y stays resident
-in VMEM for the whole call — ``ops.fused_step_supported`` bounds this at
-~1M nodes for s=2 (an 8 MiB y budget, half of VMEM); beyond that the split
-path takes over (streaming y through ANY/HBM with per-tile DMA is the
-follow-up for larger N).
+outside the kernel.  In the default (untiled) mode y's block spec is the
+full array, i.e. y stays resident in VMEM for the whole call — sized for
+~1M nodes at s=2 (an 8 MiB y budget, half of VMEM).
+
+Past that budget, ``y_tile=R`` selects the **embedding-tiled** mode: the
+grid becomes (2, ceil(N/R)) over row tiles of y, and each grid step holds
+only one (R, s) slab in VMEM.  Phase 0 sweeps the row tiles, each tile
+contributing exactly the edge-referenced rows it owns into a persistent
+(B, (2+M)*s) gathered-rows scratch (a masked vectorized gather per tile —
+every referenced row is written by precisely one tile, so the assembled
+rows equal a full gather bitwise).  Phase 1 computes all forces once (at
+row tile 0, from the fully-assembled scratch — elementwise per edge, so
+identical bits to the untiled formulation) and then, per row tile, runs
+the same sequential accumulation loop restricted to updates landing in
+the resident slab.  Each update touches exactly one row and rows never
+interact, so restricting the canonical per-edge stream to one tile's rows
+preserves every row's update order — the tiled result is **bitwise equal**
+to the untiled kernel and to ``ref.fused_edge_step_ref`` for any R.  This
+is what turns ``ops.fused_step_supported`` from a size rejection into a
+tiling decision.
 
 Interpret mode (CPU) is not a debug afterthought here: the kernel body
 lowers to XLA ops, turning phase 1 into a fori-loop of row updates that
@@ -98,16 +113,8 @@ def _kernel(y_in, i_ref, j_ref, n_ref, mask_ref, lr_ref, y_ref, u_ref,
 
         # ---- forces + clip: the same float ops as largevis_grads_ref ---
         mask = mask_ref[...].astype(jnp.float32)
-        dij = yi - yj
-        d2 = jnp.sum(dij * dij, axis=-1, keepdims=True)
-        gpos = (2.0 * a / (1.0 + a * d2)) * dij
-        din = yi[:, None, :] - yn
-        dn2 = jnp.sum(din * din, axis=-1, keepdims=True)
-        gneg_i = -2.0 * gamma * din / ((eps + dn2) * (1.0 + a * dn2))
-        gneg_i = gneg_i * mask[..., None]
-        gi = jnp.clip(gpos + jnp.sum(gneg_i, axis=1), -clip, clip)
-        gj = jnp.clip(-gpos, -clip, clip)
-        gn = jnp.clip(-gneg_i, -clip, clip)
+        gi, gj, gn = _forces(yi, yj, yn, mask, gamma=gamma, a=a, clip=clip,
+                             eps=eps)
         # stage -lr*g rows, per-edge interleaved: [u_i, u_j, u_n0..u_n{M-1}]
         # (lr enters as a (tile, 1) per-edge block — the layout drivers
         # broadcast one scalar, the serving engine carries per-slot
@@ -147,13 +154,122 @@ def _kernel(y_in, i_ref, j_ref, n_ref, mask_ref, lr_ref, y_ref, u_ref,
         jax.lax.fori_loop(0, tile, body, 0)
 
 
+def _forces(yi, yj, yn, mask, *, gamma, a, clip, eps):
+    """The gradient math shared by both kernel modes (and bit-for-bit the
+    ops of ``largevis_grad``/``ref.largevis_grads_ref``): rowwise over
+    edges, reductions over s only — so any edge-row partitioning computes
+    identical bits."""
+    dij = yi - yj
+    d2 = jnp.sum(dij * dij, axis=-1, keepdims=True)
+    gpos = (2.0 * a / (1.0 + a * d2)) * dij
+    din = yi[:, None, :] - yn
+    dn2 = jnp.sum(din * din, axis=-1, keepdims=True)
+    gneg_i = -2.0 * gamma * din / ((eps + dn2) * (1.0 + a * dn2))
+    gneg_i = gneg_i * mask[..., None]
+    gi = jnp.clip(gpos + jnp.sum(gneg_i, axis=1), -clip, clip)
+    gj = jnp.clip(-gpos, -clip, clip)
+    gn = jnp.clip(-gneg_i, -clip, clip)
+    return gi, gj, gn
+
+
+def _kernel_tiled(y_in, i_ref, j_ref, n_ref, mask_ref, lr_ref, y_ref,
+                  g_ref, u_ref, *, gamma: float, a: float, clip: float,
+                  eps: float, m: int, s: int, b: int, y_tile: int,
+                  n_frozen: int):
+    """Embedding-tiled fused step: only a (y_tile, s) slab of y per step.
+
+    Grid (2, n_row_tiles), minor dim fastest: phase 0 visits every row
+    tile and assembles the gathered edge rows into the persistent
+    ``g_ref`` scratch (each tile contributes the rows it owns via a
+    masked vectorized gather); phase 1 computes the staged ``-lr*g``
+    update rows once (row tile 0 — the gather is complete by then) and
+    accumulates, per row tile, exactly the updates that land in the
+    resident slab, in the canonical per-edge order.  Updates are
+    row-local, so per-tile restriction preserves each row's accumulation
+    order — bitwise equal to the untiled kernel."""
+    del y_in  # aliased with y_ref; all access goes through the output ref
+    p = pl.program_id(0)
+    t = pl.program_id(1)
+    off = t * y_tile
+
+    @pl.when(p == 0)
+    def _gather():
+        @pl.when(t == 0)
+        def _init():
+            g_ref[...] = jnp.zeros_like(g_ref)
+
+        y = y_ref[...]                                     # (R, s) slab
+        iv = i_ref[...].reshape(-1)                        # (B,)
+        jv = j_ref[...].reshape(-1)
+        nv = n_ref[...].reshape(-1)                        # (B*m,)
+
+        def pull(idx):
+            rel = idx - off
+            ok = (rel >= 0) & (rel < y_tile)
+            vals = jnp.take(y, jnp.clip(rel, 0, y_tile - 1), axis=0)
+            return ok[:, None], vals
+
+        ok_i, vi = pull(iv)
+        ok_j, vj = pull(jv)
+        ok_n, vn = pull(nv)
+        g = g_ref[...]
+        gi = jnp.where(ok_i, vi, g[:, 0:s])
+        gj = jnp.where(ok_j, vj, g[:, s:2 * s])
+        gn = jnp.where(ok_n, vn, g[:, 2 * s:].reshape(b * m, s))
+        g_ref[...] = jnp.concatenate(
+            [gi, gj, gn.reshape(b, m * s)], axis=1)
+
+    @pl.when(p == 1)
+    def _apply():
+        @pl.when(t == 0)
+        def _grad():
+            g = g_ref[...]
+            yi = g[:, 0:s]
+            yj = g[:, s:2 * s]
+            yn = g[:, 2 * s:].reshape(b, m, s)
+            mask = mask_ref[...].astype(jnp.float32)
+            gi, gj, gn = _forces(yi, yj, yn, mask, gamma=gamma, a=a,
+                                 clip=clip, eps=eps)
+            lr = lr_ref[...]                               # (B, 1)
+            u = jnp.concatenate([gi[:, None, :], gj[:, None, :], gn],
+                                axis=1)
+            u_ref[...] = (-lr[:, :, None] * u).reshape(b, (2 + m) * s)
+
+        def _acc(rr, u_row):
+            # out-of-slab (and frozen-row) updates degrade to rewriting
+            # the current value — a bitwise no-op, like the untiled
+            # kernel's -0.0 add for frozen rows
+            rel = rr - off
+            ok = (rel >= 0) & (rel < y_tile)
+            if n_frozen:
+                ok = ok & (rr >= n_frozen)
+            safe = jnp.clip(rel, 0, y_tile - 1)
+            cur = y_ref[safe, :]
+            y_ref[safe, :] = jnp.where(ok, cur + u_row, cur)
+
+        def body(e, _):
+            u = u_ref[e, :].reshape(2 + m, s)
+            _acc(i_ref[e, 0], u[0])
+            _acc(j_ref[e, 0], u[1])
+
+            def nbody(mm, _):
+                _acc(n_ref[e, mm], u[2 + mm])
+                return 0
+
+            jax.lax.fori_loop(0, m, nbody, 0)
+            return 0
+
+        jax.lax.fori_loop(0, b, body, 0)
+
+
 @functools.partial(jax.jit, static_argnames=("gamma", "a", "clip", "eps",
                                              "tile", "interpret", "gather",
-                                             "n_frozen"))
+                                             "n_frozen", "y_tile"))
 def fused_edge_step(y, i, j, negs, neg_mask, lr, *, gamma: float = 7.0,
                     a: float = 1.0, clip: float = 5.0, eps: float = 0.1,
                     tile: int = 1024, interpret: bool | None = None,
-                    gather: str = "take", n_frozen: int = 0):
+                    gather: str = "take", n_frozen: int = 0,
+                    y_tile: int = 0):
     """One in-place SGD update of ``y`` over a sampled edge batch.
 
     y: (N, s) f32; i/j: (B,) int32 edge endpoints; negs: (B, M) int32
@@ -171,12 +287,25 @@ def fused_edge_step(y, i, j, negs, neg_mask, lr, *, gamma: float = 7.0,
     Any B: the batch is zero-padded to a tile multiple; padded edges point
     at row 0 with i == j and masked negatives, so their gradient is exactly
     zero and the padded updates are no-ops.
+
+    ``y_tile=R`` (with ``0 < R < N``) selects the embedding-tiled mode:
+    per grid step only an (R, s) slab of y is resident — the mode that
+    lifts the full-VMEM-residency size bound (``ops.largevis_edge_step``
+    picks R automatically past the 8 MiB budget).  Bitwise equal to the
+    untiled mode for any R (see module docstring); ``gather``/``tile``
+    are ignored there (the tiled gather is always the vectorized masked
+    form, and edge blocks are whole-batch).
     """
     interpret = _resolve_interpret(interpret)
     assert gather in ("take", "loop"), gather
     N, s = y.shape
     B = i.shape[0]
     M = negs.shape[1]
+    if 0 < y_tile < N:
+        return _fused_edge_step_tiled(
+            y, i, j, negs, neg_mask, lr, gamma=gamma, a=a, clip=clip,
+            eps=eps, y_tile=int(y_tile), interpret=interpret,
+            n_frozen=n_frozen)
     t = min(tile, B)
     pad = (-B) % t
     lr = jnp.broadcast_to(jnp.asarray(lr, jnp.float32), (B,))
@@ -216,3 +345,52 @@ def fused_edge_step(y, i, j, negs, neg_mask, lr, *, gamma: float = 7.0,
     )(y.astype(jnp.float32), i.reshape(-1, 1).astype(jnp.int32),
       j.reshape(-1, 1).astype(jnp.int32), negs.astype(jnp.int32),
       neg_mask.astype(jnp.float32), lr.reshape(-1, 1))
+
+
+def _fused_edge_step_tiled(y, i, j, negs, neg_mask, lr, *, gamma, a, clip,
+                           eps, y_tile: int, interpret, n_frozen: int):
+    """The embedding-tiled pallas_call (see ``_kernel_tiled``).
+
+    y pads to a row-tile multiple (padded rows are never referenced by
+    any edge, and are sliced off after the call); edge operands enter as
+    whole-batch blocks — their VMEM footprint is O(B*(2+M)*s), never a
+    function of N.  No batch padding: the untiled mode's padded edges
+    only ever add -0.0 to row 0 (a bitwise no-op), so dropping them
+    keeps the two modes bitwise equal.
+    """
+    N, s = y.shape
+    B = i.shape[0]
+    M = negs.shape[1]
+    R = int(min(y_tile, N))
+    n_tiles = -(-N // R)
+    Np = n_tiles * R
+    yp = y.astype(jnp.float32)
+    if Np != N:
+        yp = jnp.pad(yp, ((0, Np - N), (0, 0)))
+    lr = jnp.broadcast_to(jnp.asarray(lr, jnp.float32), (B,))
+    kern = functools.partial(_kernel_tiled, gamma=gamma, a=a, clip=clip,
+                             eps=eps, m=M, s=s, b=B, y_tile=R,
+                             n_frozen=n_frozen)
+    out = pl.pallas_call(
+        kern,
+        grid=(2, n_tiles),
+        in_specs=[
+            pl.BlockSpec((R, s), lambda p, t: (t, 0)),
+            pl.BlockSpec((B, 1), lambda p, t: (0, 0)),
+            pl.BlockSpec((B, 1), lambda p, t: (0, 0)),
+            pl.BlockSpec((B, M), lambda p, t: (0, 0)),
+            pl.BlockSpec((B, M), lambda p, t: (0, 0)),
+            pl.BlockSpec((B, 1), lambda p, t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((R, s), lambda p, t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, s), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((B, (2 + M) * s), jnp.float32),   # gathered rows
+            pltpu.VMEM((B, (2 + M) * s), jnp.float32),   # staged -lr*g
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(yp, i.reshape(-1, 1).astype(jnp.int32),
+      j.reshape(-1, 1).astype(jnp.int32), negs.astype(jnp.int32),
+      neg_mask.astype(jnp.float32), lr.reshape(-1, 1))
+    return out[:N] if Np != N else out

@@ -19,10 +19,25 @@ from repro.kernels.largevis_grad import (
     largevis_grads_chunked as _lvgrad_pallas,
 )
 from repro.kernels.largevis_step import fused_edge_step as _lvstep_pallas
+from repro.runtime import autotune
 
-# the fused edge-step kernel keeps the whole (N, s) embedding VMEM-resident
-# for the duration of the call; above this budget the split path takes over
+# VMEM budget for the fused edge-step kernel's resident slab of y.  This
+# is no longer a support bound: past it the kernel switches to the
+# embedding-tiled mode (y_tile row slabs, bitwise-equal — see
+# ``largevis_step``) instead of being rejected.
 _FUSED_MAX_Y_BYTES = 8 * 1024 * 1024
+
+
+def _tuned(kernel: str, shape: dict, default: dict, kw: dict) -> dict:
+    """Fill ``kw`` with autotuned tile parameters (explicit args win).
+
+    ``default`` is the route's legacy hard-coded config — what
+    ``AUTOTUNE=off`` (and a cold cache) reproduces bitwise — and also
+    whitelists which keys a cached entry may contribute."""
+    cfg = autotune.get(kernel, shape, default)
+    for name, val in cfg.items():
+        kw.setdefault(name, val)
+    return kw
 
 
 def _on_tpu() -> bool:
@@ -38,20 +53,27 @@ def _resolve(impl: str) -> str:
 def fused_step_supported(n_nodes: int, out_dim: int) -> bool:
     """Whether ``largevis_edge_step`` may route to the fused kernel.
 
-    On TPU the kernel needs the full (N, s) f32 embedding resident in VMEM
-    (~16 MB/core; half is budgeted for y, the rest for edge blocks and
-    scratch), so it is bounded at ~1M nodes for s=2.  CPU interpret mode
-    lowers to plain XLA ops and has no size bound.  Any other backend
-    (GPU) gets the split path: there the interpret lowering's sequential
-    per-row update loop would serialize B*(2+M) tiny updates per step,
-    far slower than one parallel scatter-add.
+    True for ANY size on CPU and TPU: past the per-call VMEM budget
+    (``_FUSED_MAX_Y_BYTES`` for the resident y slab) the kernel runs in
+    its embedding-tiled mode — per grid step only a (y_tile, s) slab of
+    y is VMEM-resident, bitwise-equal to the untiled kernel — so size is
+    a tiling decision here, not a rejection (``largevis_edge_step`` picks
+    y_tile below).  Any other backend (GPU) gets the split path: there
+    the sequential per-row update loop would serialize B*(2+M) tiny
+    updates per step, far slower than one parallel scatter-add.
     """
-    backend = jax.default_backend()
-    if backend == "cpu":
-        return True
-    if backend != "tpu":
-        return False
-    return n_nodes * out_dim * 4 <= _FUSED_MAX_Y_BYTES
+    del n_nodes, out_dim  # size no longer bounds support — tiling does
+    return jax.default_backend() in ("cpu", "tpu")
+
+
+def _fused_y_tile(n_nodes: int, out_dim: int) -> int:
+    """Row-tile for the fused step's embedding-tiled mode (0 = untiled).
+
+    Untiled while the whole (N, s) f32 embedding fits the VMEM budget;
+    past it, the largest row count whose slab stays inside the budget."""
+    if n_nodes * out_dim * 4 <= _FUSED_MAX_Y_BYTES:
+        return 0
+    return max(8, _FUSED_MAX_Y_BYTES // (4 * out_dim))
 
 
 def pairwise_sqdist(a, b, *, impl: str = "auto", **kw):
@@ -77,13 +99,20 @@ def topk_sqdist(a, b, k, *, impl: str = "auto", **kw):
         computation — no (M, N) buffer either way).
 
     Both paths accept the a_ids/b_ids/codes/init/dedup keywords; see
-    ``ref.topk_sqdist_ref``.  Each impl has its own (bm, bn) defaults
-    (VMEM-sized for the kernel, CPU-cache-sized for the oracle) — pass
-    explicit tiles when bitwise cross-impl equality matters.
+    ``ref.topk_sqdist_ref``.  Tile parameters (bm/bn/lane, plus merge on
+    the oracle) resolve through the autotuner per (backend, route,
+    shape-bucket) — ``AUTOTUNE=off`` reproduces each route's legacy
+    hard-coded defaults bitwise; pass explicit tiles when bitwise
+    cross-impl equality matters.
     """
+    shape = dict(m=a.shape[0], n=b.shape[0], d=a.shape[1], k=int(k))
     if impl in ("fused", "pallas") or (impl == "auto" and _on_tpu()):
+        kw.pop("merge", None)                 # oracle-only knob
+        _tuned("topk_sqdist", shape, dict(bm=256, bn=512, lane=128), kw)
         return _topk_pallas(a, b, k, interpret=not _on_tpu(), **kw)
     if impl in ("ref", "auto"):
+        _tuned("topk_sqdist", shape,
+               dict(bm=2048, bn=None, lane=1, merge="auto"), kw)
         return ref.topk_sqdist_ref(a, b, k, **kw)
     raise ValueError(f"unknown impl {impl!r}; expected fused|pallas|ref|auto")
 
@@ -93,6 +122,9 @@ def largevis_grads(yi, yj, yneg, neg_mask, *, gamma=7.0, a=1.0, clip=5.0,
     # chunked entry: pads odd (collision-capped) batches to a tile multiple,
     # so the kernel is usable inside the scanned layout engine
     if _resolve(impl) == "pallas":
+        _tuned("largevis_grads",
+               dict(b=yi.shape[0], m=yneg.shape[1], s=yi.shape[1]),
+               dict(tile=2048), kw)
         return _lvgrad_pallas(yi, yj, yneg, neg_mask, gamma=gamma, a=a,
                               clip=clip, eps=eps,
                               interpret=not _on_tpu(), **kw)
@@ -122,12 +154,22 @@ def largevis_edge_step(y, i, j, negs, neg_mask, lr, *, gamma=7.0, a=1.0,
         general scatter-add (~1.5x at N=20k on CPU), so the kernel is the
         fastest formulation on CPU as well as TPU.
 
-    Callers must check :func:`fused_step_supported` first (backend gate +
-    TPU VMEM bound); ``core.layout_engine.sgd_edge_step`` falls back to
-    the split gather/grad/scatter path when it fails, and for autodiff
-    ``prob_fn``s.
+    Callers must check :func:`fused_step_supported` first (a backend
+    gate only, now that the embedding-tiled mode lifts the VMEM size
+    bound); ``core.layout_engine.sgd_edge_step`` falls back to the split
+    gather/grad/scatter path when it fails, and for autodiff
+    ``prob_fn``s.  Tile parameters (edge ``tile``, ``gather`` mode, and
+    the embedding row tile ``y_tile``) resolve through the autotuner;
+    when neither the caller nor a tuned entry sets ``y_tile``, it is
+    derived from the VMEM budget (0 = untiled while y fits).
     """
     if impl in ("auto", "fused", "pallas"):
+        _tuned("largevis_edge_step",
+               dict(n=y.shape[0], b=i.shape[0], m=negs.shape[1],
+                    s=y.shape[1]),
+               dict(tile=1024, gather="take", y_tile=0), kw)
+        if not kw.get("y_tile"):
+            kw["y_tile"] = _fused_y_tile(y.shape[0], y.shape[1])
         return _lvstep_pallas(y, i, j, negs, neg_mask, lr, gamma=gamma,
                               a=a, clip=clip, eps=eps, n_frozen=n_frozen,
                               **kw)
