@@ -138,6 +138,57 @@ def engine_rows(rows: Rows, ns=ENGINE_NS):
                                         3))
 
 
+def reshard_resume_rows(rows: Rows, ns=ENGINE_NS):
+    """Elastic-restore cost: resume a P=4 checkpoint on a 1-device mesh.
+
+    Writes stage checkpoints (``graph`` + ``weights``, global arrays)
+    tagged as written by a 4-shard mesh — the tag is metadata, the
+    arrays are host-gathered globals, so no 4-device mesh is needed to
+    produce them — then times the full topology-crossing resume path:
+    ``StageCheckpointer.restore`` (CRC-verified load + re-shard onto the
+    current mesh) for both stages plus the ``build_samplers_sharded``
+    alias-table rebuild, which a resuming process always redoes (sharded
+    tables are P-dependent and never checkpointed).  The ``us`` wall
+    time is the CI-gated metric: the price of coming back from a mesh
+    shrink must stay within 2x of the committed baseline (README
+    "Robustness" quotes this row as the resume-cost contract)."""
+    import tempfile
+
+    from repro.checkpoint.largevis_state import StageCheckpointer
+    from repro.launch.mesh import make_data_mesh
+
+    k = 10
+    for n in ns:
+        rng = np.random.default_rng(0)
+        idx = rng.integers(0, n, (n, k)).astype(np.int32)
+        dist = rng.uniform(0.1, 2.0, (n, k)).astype(np.float32)
+        w = rng.uniform(0.5, 1.5, (n, k)).astype(np.float32)
+        ckdir = tempfile.mkdtemp(prefix=f"bench_reshard_n{n}_")
+        ckpt = StageCheckpointer(
+            CheckpointConfig(directory=ckdir, resume=True), "bench")
+        topo = {"topology": {"distributed": True, "data_shards": 4,
+                             "n_rows": int(n)}}
+        ckpt.save("graph", {"idx": idx, "dist": dist}, extra=topo)
+        ckpt.save("weights", {"w": w}, extra=topo)
+        mesh = make_data_mesh(1)
+
+        def restore_rebuild():
+            g, _, _ = ckpt.restore("graph", mesh=mesh)
+            wt, _, _ = ckpt.restore("weights", mesh=mesh)
+            es, neg = sampler_lib.build_samplers_sharded(
+                np.asarray(g["idx"]), np.asarray(wt["w"]), mesh=mesh)
+            jax.block_until_ready((es.threshold, neg.threshold))
+            return es
+
+        try:
+            _, (secs,) = best_of_interleaved([restore_rebuild], repeats=8)
+        finally:
+            shutil.rmtree(ckdir, ignore_errors=True)
+        rows.add(f"reshard_resume_n{n // 1000}k", secs,
+                 n_rows=n, n_edges=n * k, from_shards=4, to_shards=1,
+                 us_per_row=round(secs * 1e6 / n, 4))
+
+
 def run(rows: Rows):
     from repro.core.baselines.tsne import tsne_layout
     from repro.core.largevis import build_graph, layout_graph
@@ -156,18 +207,22 @@ def run(rows: Rows):
                  sec_per_iter=round(secs_t / 250, 5),
                  speedup_largevis=round(secs_t / max(secs, 1e-9), 2))
     engine_rows(rows)
+    reshard_resume_rows(rows)
 
 
 def run_tiny(rows: Rows):
     """CI bench-smoke mode: N=2000 engine comparison only (same config as
-    the full run's n2000 rows, so the committed baseline stays valid)."""
+    the full run's n2000 rows, so the committed baseline stays valid),
+    plus the N=2000 elastic-restore row for the reshard-resume gate."""
     engine_rows(rows, ns=(2_000,))
+    reshard_resume_rows(rows, ns=(2_000,))
 
 
 def run_engine(rows: Rows):
     """Engine rows only, at every N — regenerates the committed baseline
     (the paper's largevis-vs-tsne rows are not part of the CI gate)."""
     engine_rows(rows)
+    reshard_resume_rows(rows)
 
 
 if __name__ == "__main__":

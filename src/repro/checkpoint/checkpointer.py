@@ -47,6 +47,14 @@ class CheckpointCorruptError(RuntimeError):
     """A committed checkpoint failed verification (CRC/shape/parse)."""
 
 
+class CheckpointIncompatibleError(RuntimeError):
+    """A committed, uncorrupted checkpoint that this process cannot use
+    (e.g. its topology tag names more shards than there are rows to
+    re-shard after a mesh shrink at tiny N).  In the ``step=None``
+    fallback walk it is skipped like corruption — an older compatible
+    checkpoint wins over a hard failure inside the re-shard path."""
+
+
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
@@ -189,7 +197,7 @@ def _load_step(path: pathlib.Path, *, expect_schema: Optional[str] = None):
 
 def restore(ckpt_dir, step: Optional[int] = None, *, shardings=None,
             like=None, expect_schema: Optional[str] = None,
-            return_meta: bool = False):
+            return_meta: bool = False, validate=None):
     """Load a checkpoint.
 
     ``step=None`` loads the NEWEST committed checkpoint that passes
@@ -201,7 +209,11 @@ def restore(ckpt_dir, step: Optional[int] = None, *, shardings=None,
     shardings: optional pytree of NamedShardings to re-shard onto (elastic
     restore onto a different mesh/device count).  like: optional pytree
     for structure validation.  ``return_meta=True`` appends the meta dict
-    to the return tuple."""
+    to the return tuple.  ``validate``: optional ``fn(meta) -> None``
+    applied to each candidate's metadata before it is accepted; raising
+    ``ValueError``/:class:`CheckpointIncompatibleError` rejects the
+    candidate — skipped (with a warning) in the fallback walk, raised
+    for an explicit ``step``."""
     ckpt_dir = pathlib.Path(ckpt_dir)
     if step is None:
         candidates = sorted(all_steps(ckpt_dir), reverse=True)
@@ -216,13 +228,22 @@ def restore(ckpt_dir, step: Optional[int] = None, *, shardings=None,
         assert (path / "_COMMITTED").exists(), f"uncommitted checkpoint {path}"
         try:
             tree, meta = _load_step(path, expect_schema=expect_schema)
+            if validate is not None:
+                try:
+                    validate(meta)
+                except (ValueError, CheckpointIncompatibleError) as e:
+                    raise CheckpointIncompatibleError(f"{path}: {e}") from e
             break
-        except CheckpointCorruptError as e:
+        except (CheckpointCorruptError, CheckpointIncompatibleError) as e:
             if step is not None:
                 raise
-            warnings.warn(f"skipping corrupt checkpoint: {e}",
+            kind = ("incompatible"
+                    if isinstance(e, CheckpointIncompatibleError)
+                    else "corrupt")
+            warnings.warn(f"skipping {kind} checkpoint: {e}",
                           RuntimeWarning, stacklevel=2)
             last_err = e
+            tree = meta = None
     if tree is None:
         raise CheckpointCorruptError(
             f"every committed checkpoint in {ckpt_dir} failed verification "

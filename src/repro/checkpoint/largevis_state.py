@@ -75,14 +75,29 @@ def cfg_from_dict(d: dict) -> LargeVisConfig:
     return LargeVisConfig(**d)
 
 
+# Config fields that describe WHERE a run executes, not WHAT it computes.
+# They are excluded from ``run_fingerprint`` (so a checkpoint written on
+# one mesh resumes on any other) and recorded separately in every stage
+# checkpoint's metadata as the topology tag (see :func:`topology_tag`).
+_TOPOLOGY_FIELDS = ("distributed", "data_shards")
+
+
 def run_fingerprint(x, key, cfg: LargeVisConfig) -> str:
     """Short identity of a (data, key, cfg) run for resume validation.
 
     The data component is a strided row sample (shape/dtype + CRC32 of
     ~64 rows), cheap at any N; the cfg component excludes ``checkpoint``
-    itself so cadence/keep/dir changes never invalidate a resume."""
+    itself (so cadence/keep/dir changes never invalidate a resume) and
+    the topology fields (so the fingerprint is **topology-invariant**: a
+    P=8 run and a single-device run of the same (data, key, algorithm)
+    fingerprint identically, which is what makes stage checkpoints
+    portable across mesh shapes — the sharded graph-prep stages are
+    bitwise-equal across P, pinned in tests/test_elastic.py).  The mesh
+    shape travels in the checkpoint's topology tag instead."""
     cfg_d = cfg_to_dict(cfg)
     cfg_d.pop("checkpoint", None)
+    for f in _TOPOLOGY_FIELDS:
+        cfg_d.pop(f, None)
     h = zlib.crc32(json.dumps(cfg_d, sort_keys=True).encode())
     if key is not None:
         h = zlib.crc32(np.asarray(jax.random.key_data(key)).tobytes(), h)
@@ -92,6 +107,25 @@ def run_fingerprint(x, key, cfg: LargeVisConfig) -> str:
             f"{tuple(np.shape(x))}:{np.asarray(x).dtype}".encode(), h)
         h = zlib.crc32(np.ascontiguousarray(xs).tobytes(), h)
     return f"{h:08x}"
+
+
+def topology_tag(cfg: LargeVisConfig, n_rows: int) -> dict:
+    """The topology half of the old full-cfg fingerprint, as plain data.
+
+    Stored under ``extra["topology"]`` of every stage checkpoint: which
+    mesh wrote it (``data_shards`` resolved to the actual device count,
+    never the 0="all" sentinel) and how many real rows the global arrays
+    hold.  Restores compare it to their own mesh — a mismatch is NOT an
+    error (arrays are stored global and re-shard onto any mesh); it only
+    decides whether a layout resume must announce a
+    ``TopologyChangeWarning`` and lets the fallback walk skip degenerate
+    tags (more shards than rows)."""
+    shards = 1
+    if getattr(cfg, "distributed", False):
+        from repro.launch.mesh import make_data_mesh
+        shards = int(make_data_mesh(cfg.data_shards).shape["data"])
+    return {"distributed": bool(getattr(cfg, "distributed", False)),
+            "data_shards": shards, "n_rows": int(n_rows)}
 
 
 # ---------------------------------------------------------------------------
@@ -175,6 +209,23 @@ def load_result(path):
 # Pipeline stage checkpoints (crash recovery)
 # ---------------------------------------------------------------------------
 
+def _topology_compatible(meta: dict) -> None:
+    """Reject (ValueError) a stage checkpoint whose topology tag is
+    degenerate: more shards named than real rows to re-shard.  Such a
+    tag can only come from a mesh-shrink sequence at tiny N (every
+    shard's block was pure padding past row ``n_rows``); re-sharding it
+    forward would hand ``rows_per_shard`` an all-padding layout, so the
+    fallback walk skips to an older, compatible checkpoint instead."""
+    tag = (meta.get("extra") or {}).get("topology")
+    if tag is None:
+        return                       # pre-elastic checkpoint: global, fine
+    shards, n_rows = int(tag.get("data_shards", 1)), int(tag.get("n_rows", 0))
+    if n_rows and shards > n_rows:
+        raise ValueError(
+            f"topology tag names {shards} shards for {n_rows} rows — "
+            f"cannot re-shard")
+
+
 class StageCheckpointer:
     """Atomic per-stage persistence under ``CheckpointConfig.directory``.
 
@@ -182,7 +233,16 @@ class StageCheckpointer:
     step 0; ``layout`` at its global step with keep-last-k rotation).
     ``load`` returns ``None`` — never raises — when the stage is absent,
     corrupt, or fingerprinted by a different run, so the pipeline falls
-    back to recomputing the stage."""
+    back to recomputing the stage.
+
+    Elastic restore: trees are persisted host-gathered, i.e. **global**
+    (the generic checkpointer gathers sharded leaves), with the writing
+    mesh recorded as a topology tag (``extra["topology"]``) — never
+    baked into the fingerprint.  :meth:`restore` re-shards the global
+    row arrays onto whatever mesh the *resuming* process has
+    (``runtime/sharding.shard_rows`` — contiguous blocks of
+    ``rows_per_shard`` rows), so a checkpoint written on P devices
+    resumes on any P'."""
 
     def __init__(self, ckpt_cfg: CheckpointConfig, fingerprint: str):
         self.cfg = ckpt_cfg
@@ -206,7 +266,7 @@ class StageCheckpointer:
         try:
             tree, step, meta = ck.restore(
                 self._dir(stage), expect_schema=f"largevis-stage-{stage}",
-                return_meta=True)
+                return_meta=True, validate=_topology_compatible)
         except FileNotFoundError:
             return None
         except (ck.CheckpointCorruptError, ValueError) as e:
@@ -222,6 +282,36 @@ class StageCheckpointer:
                 RuntimeWarning, stacklevel=2)
             return None
         return tree, step, extra
+
+    def restore(self, stage: str, *, mesh=None, axis: str = "data"):
+        """:meth:`load`, then re-shard onto ``mesh`` (the elastic path).
+
+        Returns ``(tree, step, extra)`` or ``None``.  With a mesh of
+        more than one device, every array leaf whose leading dim equals
+        the topology tag's ``n_rows`` (i.e. every row-layout array —
+        scalars and oddly-shaped extras pass through untouched) is
+        placed via ``sharding.shard_rows``: dim 0 over ``axis`` in the
+        ``rows_per_shard`` contiguous-block layout, shape untouched.
+        The writing mesh's shard count is irrelevant — the stored
+        arrays are global — which is the whole point: any-P to any-P
+        resume through one code path."""
+        loaded = self.load(stage)
+        if loaded is None or mesh is None:
+            return loaded
+        tree, step, extra = loaded
+        if int(mesh.shape[axis]) <= 1:
+            return loaded
+        from repro.runtime import sharding as sh
+        tag = (extra or {}).get("topology") or {}
+        n_rows = int(tag.get("n_rows", 0))
+
+        def place(leaf):
+            arr = np.asarray(leaf)
+            if arr.ndim >= 1 and n_rows and arr.shape[0] == n_rows:
+                return sh.shard_rows(arr, mesh, axis)
+            return jnp.asarray(arr)
+
+        return jax.tree.map(place, tree), step, extra
 
 
 class AsyncStageWriter:

@@ -244,7 +244,7 @@ def forest_knn(x: jax.Array, key, *, n_trees: int, depth: int, k: int,
     return idx, dist
 
 
-def build_knn_graph(x: jax.Array, key, cfg):
+def build_knn_graph(x: jax.Array, key, cfg, *, fault=None):
     """Full paper pipeline: forest init + neighbor exploring iterations.
 
     Returns (idx (N,K) int32, sqdist (N,K) f32).  With
@@ -253,11 +253,13 @@ def build_knn_graph(x: jax.Array, key, cfg):
     is False, which keeps the paper's linear forest+explore path for
     stage 1 (the ring's masked distance fold is O(N^2 d / P) compute;
     see the config docstring) while the downstream stages stay sharded.
+    ``fault`` (a FaultInjector) reaches the sharded path's per-shard
+    ``knn_ring_step:<s>`` sites; the single-device path has none.
     """
     if (getattr(cfg, "distributed", False)
             and getattr(cfg, "knn_distributed", True)):
         from repro.core.knn_sharded import build_knn_graph_sharded
-        return build_knn_graph_sharded(x, key, cfg)
+        return build_knn_graph_sharded(x, key, cfg, fault=fault)
     from repro.core.neighbor_explore import neighbor_explore
     N = x.shape[0]
     k = min(cfg.n_neighbors, N - 1)

@@ -103,13 +103,17 @@ def _make_sharded_fn(mesh, axis: str, *, n_shards: int, n_real: int, k: int,
 
 
 def build_knn_graph_sharded(x: jax.Array, key, cfg, *, mesh=None,
-                            axis: str = "data"):
+                            axis: str = "data", fault=None):
     """Sharded version of `knn.build_knn_graph`: (idx (N,K), sqdist (N,K)).
 
     ``mesh`` defaults to a 1-D "data" mesh over ``cfg.data_shards``
     devices (0 = all available).  N need not divide the shard count —
     points are zero-padded and padded ids are suppressed by the tile
     masks before any top-k.
+
+    ``fault``: the per-shard ``knn_ring_step:<s>`` sites fire once per
+    shard before the ring dispatch; an injected shard fault surfaces as
+    ``ShardFailedError`` (stage ``"knn"``) for the mesh-recovery loop.
     """
     if mesh is None:
         from repro.launch.mesh import make_data_mesh
@@ -131,5 +135,8 @@ def build_knn_graph_sharded(x: jax.Array, key, cfg, *, mesh=None,
         mesh, axis, n_shards=n_shards, n_real=N, k=k, n_trees=cfg.n_trees,
         depth=depth, iters=cfg.n_explore_iters, sample=cfg.explore_sample,
         impl=getattr(cfg, "knn_impl", "auto"))
+    if fault is not None:
+        from repro.runtime.fault_tolerance import fire_per_shard
+        fire_per_shard(fault, "knn_ring_step", n_shards, stage="knn")
     idx, dist = fn(xp, ids, proj, seed)
     return idx[:N], dist[:N]

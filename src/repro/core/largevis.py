@@ -139,29 +139,45 @@ def build_graph(x, key, *, cfg: LargeVisConfig | None = None, fault=None):
     rerun — a kill anywhere in stage 1 resumes at the last completed
     sub-stage with bitwise-equal outputs (the graph is deterministic in
     ``(x, key, cfg)``, which is exactly what the fingerprint binds).
+    Checkpoints are **topology-portable**: arrays are stored global with
+    the writing mesh as a metadata tag, the fingerprint excludes the
+    mesh shape, and restores re-shard onto the current mesh
+    (``StageCheckpointer.restore``) — a run checkpointed on P devices
+    resumes on any P', and the sharded graph-prep stages are themselves
+    bitwise P-invariant, so the resumed outputs match a single-device
+    run exactly (tests/test_elastic.py).
     ``fault`` fires at sites ``stage:graph`` / ``stage:weights`` after
-    each boundary commits (the kill-matrix hook)."""
+    each boundary commits (the kill-matrix hook), plus the per-shard
+    sites ``knn_ring_step:<s>`` / ``calibrate_shard:<s>`` /
+    ``symmetrize_exchange:<s>`` inside the sharded stages — an injected
+    shard fault surfaces as
+    :class:`~repro.runtime.fault_tolerance.ShardFailedError` for the
+    mesh-recovery loop in :func:`largevis`."""
     cfg = cfg if cfg is not None else LargeVisConfig()
     _apply_autotune_mode(cfg)
     ckpt = _stage_ckpt(x, key, cfg)
+    mesh = _data_mesh(cfg) if cfg.distributed else None
     idx = dist = w = None
+    topo = None
     if ckpt is not None:
+        from repro.checkpoint.largevis_state import topology_tag
+        topo = {"topology": topology_tag(cfg, x.shape[0])}
         jnp = jax.numpy
-        cached = ckpt.load("graph")
+        cached = ckpt.restore("graph", mesh=mesh)
         if cached is not None:
             idx = jnp.asarray(cached[0]["idx"])
             dist = jnp.asarray(cached[0]["dist"])
-        cached = ckpt.load("weights")
+        cached = ckpt.restore("weights", mesh=mesh)
         if cached is not None and idx is not None:
             w = jnp.asarray(cached[0]["w"])
     t0 = time.time()
     if idx is None:
-        idx, dist = knn_lib.build_knn_graph(x, key, cfg)
+        idx, dist = knn_lib.build_knn_graph(x, key, cfg, fault=fault)
         # block (no transfer) so knn_s/weights_s split the stages honestly —
         # async dispatch would otherwise smear KNN compute into weights_s
         jax.block_until_ready((idx, dist))
         if ckpt is not None:
-            ckpt.save("graph", {"idx": idx, "dist": dist})
+            ckpt.save("graph", {"idx": idx, "dist": dist}, extra=topo)
         if fault is not None:
             fault.fire("stage:graph")
     t1 = time.time()
@@ -169,13 +185,13 @@ def build_graph(x, key, *, cfg: LargeVisConfig | None = None, fault=None):
         if cfg.distributed:
             w = perp_lib.edge_weights_sharded(idx, dist, cfg.perplexity,
                                               iters=cfg.perplexity_iters,
-                                              mesh=_data_mesh(cfg))
+                                              mesh=mesh, fault=fault)
         else:
             w = perp_lib.edge_weights(idx, dist, cfg.perplexity,
                                       iters=cfg.perplexity_iters)
         jax.block_until_ready(w)
         if ckpt is not None:
-            ckpt.save("weights", {"w": w})
+            ckpt.save("weights", {"w": w}, extra=topo)
         if fault is not None:
             fault.fire("stage:weights")
     t2 = time.time()
@@ -266,7 +282,8 @@ def layout_graph(knn_idx, weights, key, *, cfg: LargeVisConfig | None = None,
     if cfg.distributed:
         res = layout_lib.run_layout_local_sgd(key, edge_s, neg_s,
                                               knn_idx.shape[0], cfg,
-                                              _data_mesh(cfg), fault=fault)
+                                              _data_mesh(cfg), fault=fault,
+                                              weights=weights)
     else:
         res = layout_lib.run_layout(key, edge_s, neg_s, knn_idx.shape[0],
                                     cfg, callback=callback, fault=fault)
@@ -292,11 +309,56 @@ def largevis(x, key=None, *, cfg: LargeVisConfig | None = None,
     embedding is bitwise-equal to an uninterrupted run (tests/test_resume.py
     kills at every boundary).  ``fault`` takes a
     :class:`~repro.runtime.fault_tolerance.FaultInjector` for those tests.
+
+    Elasticity (PR 10): stage checkpoints are topology-portable, and a
+    shard lost mid-run (``ShardFailedError`` from a per-shard fault
+    site, or a real device drop surfaced the same way) does not kill
+    the job — one :class:`DegradedModeWarning` is emitted, the mesh is
+    rebuilt with half the shards (``data_shards: P -> max(1, P//2)``)
+    and the pipeline re-enters from the last committed stage via the
+    re-shard restore path.  Only an unrecoverable failure (already at
+    one shard) propagates.  When checkpointing is enabled a
+    :class:`~repro.runtime.fault_tolerance.PreemptionGuard` is armed
+    for the duration of the fit: SIGTERM/SIGINT runs a synchronous save
+    of the newest layout state before the process exits by the signal.
     """
     cfg = cfg if cfg is not None else LargeVisConfig()
     _apply_autotune_mode(cfg)
     if key is None:
         key = jax.random.key(cfg.seed)
+    from repro.runtime.fault_tolerance import (PreemptionGuard,
+                                               ShardFailedError)
+    guard = None
+    if getattr(cfg, "checkpoint", None) is not None \
+            and PreemptionGuard.active() is None:
+        import signal as _signal
+        guard = PreemptionGuard(signals=(_signal.SIGTERM, _signal.SIGINT),
+                                exit_after_save=True).activate()
+    try:
+        while True:
+            try:
+                return _largevis_once(x, key, cfg=cfg, callback=callback,
+                                      fault=fault)
+            except ShardFailedError as e:
+                if not cfg.distributed:
+                    raise
+                n_shards = int(_data_mesh(cfg).shape["data"])
+                if n_shards <= 1:
+                    raise       # nothing left to shed — a real failure
+                new_shards = max(1, n_shards // 2)
+                warnings.warn(DegradedModeWarning(
+                    e.stage, f"mesh[{n_shards}]", f"mesh[{new_shards}]", e),
+                    stacklevel=2)
+                # injector hit counts persist across the retry, so the
+                # same injected fault cannot re-fire on the smaller mesh
+                cfg = dataclasses.replace(cfg, data_shards=new_shards)
+    finally:
+        if guard is not None:
+            guard.restore_handlers()
+
+
+def _largevis_once(x, key, *, cfg, callback, fault):
+    """One pipeline pass on cfg's current mesh (see :func:`largevis`)."""
     kg, kl = jax.random.split(key)
     idx, dist, w, t_graph = build_graph(x, kg, cfg=cfg, fault=fault)
     res, (edge_s, neg_s), t_layout = layout_graph(

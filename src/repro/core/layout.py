@@ -35,7 +35,10 @@ from repro.core.sampler import (EdgeSampler, NodeSampler,
 from repro.runtime.compat import shard_map
 from repro.runtime.fault_tolerance import (DegradedModeWarning,
                                            DivergenceWarning, InjectedFault,
-                                           LayoutDivergedError, Watchdog)
+                                           LayoutDivergedError,
+                                           PreemptionGuard,
+                                           TopologyChangeWarning, Watchdog,
+                                           fire_per_shard)
 
 
 @functools.partial(
@@ -75,7 +78,7 @@ def layout_health(y):
     return nonfinite, max_abs
 
 
-def _layout_stage_ckpt(key, n_nodes, cfg, edge_sampler=None):
+def _layout_stage_ckpt(key, n_nodes, cfg, edge_sampler=None, table=None):
     """StageCheckpointer for the layout stage, else None.
 
     The layout trajectory is a pure function of (samplers, key, cfg, N),
@@ -83,14 +86,22 @@ def _layout_stage_ckpt(key, n_nodes, cfg, edge_sampler=None):
     of its alias threshold table, which is itself a deterministic
     function of the input data.  A directory written by a different
     run (other data, key, or hyper-params) can never resume into this
-    one, even at identical N."""
+    one, even at identical N.
+
+    ``table`` overrides the sampler-derived fingerprint data.  The
+    local-SGD driver passes the *global* edge weights here: a
+    :class:`~repro.core.sampler.ShardedEdgeSampler`'s threshold table is
+    laid out per shard — (P, E_loc) — so fingerprinting it would bind
+    the checkpoint to the mesh shape and break topology-portable resume,
+    while the weights are identical on every mesh."""
     ckpt_cfg = getattr(cfg, "checkpoint", None)
     if ckpt_cfg is None:
         return None
     from repro.checkpoint.largevis_state import (StageCheckpointer,
                                                  run_fingerprint)
-    table = None
-    if edge_sampler is not None:
+    if table is not None:
+        table = np.asarray(table).reshape(-1, 1)
+    elif edge_sampler is not None:
         table = np.asarray(edge_sampler.threshold).reshape(-1, 1)
     fp = run_fingerprint(table, key, cfg) + f"-n{n_nodes}"
     return StageCheckpointer(ckpt_cfg, fp)
@@ -228,7 +239,7 @@ def make_local_sgd_fns(mesh, cfg, n_nodes: int, *, batch: int):
 
 def run_layout_local_sgd(key, edge_sampler: EdgeSampler,
                          neg_sampler: NodeSampler, n_nodes: int, cfg,
-                         mesh, *, fault=None) -> LayoutResult:
+                         mesh, *, fault=None, weights=None) -> LayoutResult:
     """Multi-device local-SGD layout driver (paper's async SGD, TPU form).
 
     Checkpointing (``cfg.checkpoint``) is at **round** granularity: after
@@ -238,22 +249,39 @@ def run_layout_local_sgd(key, edge_sampler: EdgeSampler,
     pre-derived in one batch from ``kr``, so a resumed run replays the
     same per-round key stream — killed+resumed is bitwise-equal to
     uninterrupted, exactly as on the single-device path.
-    """
+
+    Elastic resume: pass ``weights`` (the global edge weights) so the
+    fingerprint is topology-invariant (see ``_layout_stage_ckpt``); each
+    save carries a topology tag and the global edge-sample count.  A
+    checkpoint written on the SAME shard count resumes bitwise; one
+    written on a DIFFERENT shard count resumes from the last committed
+    round boundary with the completed sample count remapped onto the new
+    mesh's round structure, announced exactly once with
+    :class:`TopologyChangeWarning` (the per-replica key streams are
+    P-dependent by construction, so a cross-topology trajectory cannot
+    be bitwise-continued — the embedding state is, the schedule restarts
+    at the boundary).
+
+    ``fault`` fires ``layout_round``/``layout_saved`` (kill matrix) plus
+    the per-shard ``local_sgd_round:<s>`` sites after every round —
+    injected shard exceptions surface as ``ShardFailedError`` (stage
+    ``"layout"``) for the mesh-recovery loop, and callable specs may
+    inflate one shard's observed round time: a per-shard
+    :class:`Watchdog` tracks each shard's round times and a straggling
+    shard is flagged *by index* in ``result.stragglers`` entries
+    ``(shard, round, dt, median)`` with one summary RuntimeWarning.
+
+    A process-wide active :class:`PreemptionGuard` (armed by
+    ``largevis()`` when checkpointing is on) gets its save_fn pointed at
+    the newest completed round each round, so SIGTERM/SIGINT commits a
+    resumable stage checkpoint before the process dies."""
     n_dev = mesh.shape["data"]
-    stage_ckpt = _layout_stage_ckpt(key, n_nodes, cfg, edge_sampler)
+    stage_ckpt = _layout_stage_ckpt(key, n_nodes, cfg, edge_sampler,
+                                    table=weights)
     ckpt_cfg = getattr(cfg, "checkpoint", None)
     ky, kr = jax.random.split(key)
     y0 = (jax.random.normal(ky, (n_nodes, cfg.out_dim), jnp.float32)
           * cfg.init_scale)
-    start_round = 0
-    if stage_ckpt is not None:
-        loaded = stage_ckpt.load("layout")
-        if loaded is not None:
-            tree, start_round, _ = loaded
-            y0 = jnp.asarray(tree["y"], jnp.float32)
-    y_rep = jnp.broadcast_to(y0, (n_dev,) + y0.shape)
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    y_rep = jax.device_put(y_rep, NamedSharding(mesh, P("data", None, None)))
 
     # the replicas' batches apply concurrently between syncs (Hogwild-sum
     # combine), so the collision cap bounds the GLOBAL concurrent batch
@@ -265,7 +293,34 @@ def run_layout_local_sgd(key, edge_sampler: EdgeSampler,
     steps = max(1, total // (batch * n_dev))
     H = max(1, cfg.sync_every)
     n_rounds = max(1, steps // H)
+
+    topo = {"distributed": True, "data_shards": int(n_dev),
+            "n_rows": int(n_nodes)}
+    start_round = 0
+    if stage_ckpt is not None:
+        loaded = stage_ckpt.load("layout")
+        if loaded is not None:
+            tree, saved_round, extra = loaded
+            y0 = jnp.asarray(tree["y"], jnp.float32)
+            saved_topo = (extra or {}).get("topology") or {}
+            saved_shards = int(saved_topo.get("data_shards", n_dev))
+            if saved_shards == n_dev:
+                start_round = int(saved_round)   # bitwise continuation
+            else:
+                # same embedding state, new round structure: place the
+                # resume point at the boundary covering the samples the
+                # old mesh had already committed
+                samples_done = int((extra or {}).get(
+                    "samples_done", int(saved_round) * H * batch * n_dev))
+                start_round = samples_done // (H * batch * n_dev)
+                warnings.warn(TopologyChangeWarning(
+                    "layout", saved_shards, n_dev, start_round),
+                    stacklevel=2)
     start_round = min(int(start_round), n_rounds)
+    y_rep = jnp.broadcast_to(y0, (n_dev,) + y0.shape)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    y_rep = jax.device_put(y_rep, NamedSharding(mesh, P("data", None, None)))
+
     local_steps = make_local_sgd_fns(mesh, cfg, n_nodes, batch=batch)
     dt = 1.0 / max(steps, 1)
     # one batched draw + one device->host transfer for ALL round seeds:
@@ -273,23 +328,76 @@ def run_layout_local_sgd(key, edge_sampler: EdgeSampler,
     # synchronous device round trip every H steps, serializing the rounds
     seeds = np.asarray(jax.random.randint(kr, (n_rounds,), 0, 2**31 - 1,
                                           dtype=jnp.int32))
-    for r in range(start_round, n_rounds):
-        y_rep = local_steps(
-            y_rep, jnp.asarray(seeds[r:r + 1]), jnp.float32(r * H * dt),
-            jnp.float32(dt), edge_sampler, neg_sampler)
-        if fault is not None:
-            jax.block_until_ready(y_rep)
-            fault.fire("layout_round")
-        if stage_ckpt is not None and (
-                (r + 1) % max(1, ckpt_cfg.every_chunks) == 0
-                or r + 1 >= n_rounds):
-            stage_ckpt.save("layout", {"y": y_rep[0]}, step=r + 1,
-                            keep=max(1, ckpt_cfg.keep))
-            if fault is not None:
-                fault.fire("layout_saved")
+
+    def _extras(rounds_done: int) -> dict:
+        return {"topology": topo,
+                "samples_done": rounds_done * H * batch * n_dev}
+
+    guard = PreemptionGuard.active() if stage_ckpt is not None else None
+    preempt_state = None
+    if guard is not None:
+        # the snapshot is a fresh device buffer (slice), never donated —
+        # save() host-gathers at signal time, so rounds stay async
+        preempt_state = {"y": y0, "round": start_round}
+
+        def _preempt_save():
+            stage_ckpt.save("layout", {"y": preempt_state["y"]},
+                            step=preempt_state["round"],
+                            keep=max(1, ckpt_cfg.keep),
+                            extra=_extras(preempt_state["round"]))
+
+        guard.set_save_fn(_preempt_save)
+
+    # per-shard round-time watchdogs: on a single-controller mesh every
+    # shard observes the host-measured round time, so only an injected
+    # (or runtime-reported) inflation differentiates them — which is
+    # exactly what the straggler chaos tests feed through the callable
+    # per-shard fault specs
+    monitored = fault is not None
+    watchdogs = [Watchdog() for _ in range(n_dev)] if monitored else []
+    stragglers: list = []
+    try:
+        for r in range(start_round, n_rounds):
+            t0 = time.time()
+            y_rep = local_steps(
+                y_rep, jnp.asarray(seeds[r:r + 1]), jnp.float32(r * H * dt),
+                jnp.float32(dt), edge_sampler, neg_sampler)
+            if monitored:
+                jax.block_until_ready(y_rep)
+                fault.fire("layout_round")
+                round_dt = time.time() - t0
+                dts = fire_per_shard(fault, "local_sgd_round", n_dev,
+                                     stage="layout",
+                                     payloads=[round_dt] * n_dev)
+                for s, wd in enumerate(watchdogs):
+                    if dts[s] is not None and wd.observe(r, float(dts[s])):
+                        _, dtv, med = wd.stragglers[-1]
+                        stragglers.append((s, r, dtv, med))
+            if guard is not None:
+                preempt_state["y"] = y_rep[0]
+                preempt_state["round"] = r + 1
+            if stage_ckpt is not None and (
+                    (r + 1) % max(1, ckpt_cfg.every_chunks) == 0
+                    or r + 1 >= n_rounds):
+                stage_ckpt.save("layout", {"y": y_rep[0]}, step=r + 1,
+                                keep=max(1, ckpt_cfg.keep),
+                                extra=_extras(r + 1))
+                if fault is not None:
+                    fault.fire("layout_saved")
+    finally:
+        if guard is not None:
+            guard.set_save_fn(None)
+    if stragglers:
+        worst = max(stragglers, key=lambda t: t[2])
+        warnings.warn(
+            f"local-SGD: shard {worst[0]} straggling — round {worst[1]} "
+            f"took {worst[2]:.3f}s vs median {worst[3]:.3f}s "
+            f"({len(stragglers)} flagged round(s); see "
+            f"LayoutResult.stragglers)", RuntimeWarning, stacklevel=2)
     done = n_rounds - start_round
     return LayoutResult(y=y_rep[0], steps=done * H,
-                        edge_samples=done * H * batch * n_dev)
+                        edge_samples=done * H * batch * n_dev,
+                        stragglers=stragglers)
 
 
 def run_layout(key, edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
@@ -384,6 +492,24 @@ def run_layout(key, edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
         ckpt_cfg = getattr(cfg, "checkpoint", None)
         last_good = (np.asarray(y), start) if health is not None else None
         t, chunk_i, first_chunk = start, 0, True
+        # preemption: point the process-wide active guard (armed by
+        # largevis() when checkpointing is on) at the newest completed
+        # chunk — the snapshot is an on-device jnp.copy (no host sync,
+        # never donated), host-gathered only if a signal actually lands
+        guard = PreemptionGuard.active() if stage_ckpt is not None else None
+        preempt_state = None
+        if guard is not None:
+            preempt_state = {"y": jnp.copy(y), "step": start,
+                             "extra": {"rho0_scale": rho0_scale,
+                                       "rollbacks": rollbacks}}
+
+            def _preempt_save():
+                stage_ckpt.save("layout", {"y": preempt_state["y"]},
+                                step=preempt_state["step"],
+                                keep=max(1, ckpt_cfg.keep),
+                                extra=preempt_state["extra"])
+
+            guard.set_save_fn(_preempt_save)
         try:
             while t < steps:
                 h = min(H, steps - t)
@@ -456,9 +582,16 @@ def run_layout(key, edge_sampler: EdgeSampler, neg_sampler: NodeSampler,
                                         keep=keep, extra=extra)
                         if fault is not None:
                             fault.fire("layout_saved")
+                if guard is not None:
+                    preempt_state["y"] = jnp.copy(y)
+                    preempt_state["step"] = t
+                    preempt_state["extra"] = {"rho0_scale": rho0_scale,
+                                              "rollbacks": rollbacks}
                 if on_chunk is not None:
                     on_chunk(t, steps, y)
         finally:
+            if guard is not None:
+                guard.set_save_fn(None)
             if writer is not None:
                 writer.close()
     else:

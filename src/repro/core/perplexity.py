@@ -176,17 +176,24 @@ def _make_calibrate_sharded(mesh, axis: str, iters: int):
 
 
 def calibrate_p_sharded(knn_sqdist, perplexity: float, *, iters: int = 64,
-                        mesh=None, axis: str = "data") -> jax.Array:
+                        mesh=None, axis: str = "data",
+                        fault=None) -> jax.Array:
     """Row-parallel :func:`calibrate_p` under shard_map.
 
     Rows pad to a shard multiple (zero rows bisect harmlessly and are
     sliced off); every surviving row is bitwise-equal to the
-    single-device result because the body is row-local."""
+    single-device result because the body is row-local.  ``fault``
+    fires the per-shard ``calibrate_shard:<s>`` sites before the
+    dispatch (shard faults -> ``ShardFailedError``, stage
+    ``"calibrate"``)."""
     mesh = _default_mesh(mesh)
     n_shards = mesh.shape[axis]
     N = knn_sqdist.shape[0]
     d2 = sh.pad_rows(jnp.asarray(knn_sqdist), n_shards)
     fn = _make_calibrate_sharded(mesh, axis, iters)
+    if fault is not None:
+        from repro.runtime.fault_tolerance import fire_per_shard
+        fire_per_shard(fault, "calibrate_shard", n_shards, stage="calibrate")
     return fn(d2, jnp.float32(perplexity))[:N]
 
 
@@ -210,13 +217,16 @@ def _make_symmetrize_sharded(mesh, axis: str, n_real: int, tile: int):
 
 
 def symmetrize_sharded(knn_idx, p, *, tile: int = 4096, mesh=None,
-                       axis: str = "data") -> jax.Array:
+                       axis: str = "data", fault=None) -> jax.Array:
     """Sharded :func:`symmetrize`: each shard computes its own rows'
     reverse weights against the all-gathered graph.
 
     Padded graph rows hold index 0 with zero p — no real row ever
     gathers from them (real knn entries are < N), so per-row results
-    are bitwise-equal to the single-device scan."""
+    are bitwise-equal to the single-device scan.  ``fault`` fires the
+    per-shard ``symmetrize_exchange:<s>`` sites before the all-gather
+    dispatch (shard faults -> ``ShardFailedError``, stage
+    ``"symmetrize"``)."""
     mesh = _default_mesh(mesh)
     n_shards = mesh.shape[axis]
     N = knn_idx.shape[0]
@@ -225,15 +235,20 @@ def symmetrize_sharded(knn_idx, p, *, tile: int = 4096, mesh=None,
     rows = jnp.arange(idx_p.shape[0], dtype=jnp.int32)
     tile = int(min(tile, sh.rows_per_shard(N, n_shards)))
     fn = _make_symmetrize_sharded(mesh, axis, N, tile)
+    if fault is not None:
+        from repro.runtime.fault_tolerance import fire_per_shard
+        fire_per_shard(fault, "symmetrize_exchange", n_shards,
+                       stage="symmetrize")
     return fn(idx_p, p_p, rows)[:N]
 
 
 def edge_weights_sharded(knn_idx, knn_sqdist, perplexity: float, *,
                          iters: int = 64, mesh=None,
-                         axis: str = "data") -> jax.Array:
+                         axis: str = "data", fault=None) -> jax.Array:
     """Sharded :func:`edge_weights`: calibration + symmetrization on the
-    data mesh, bitwise-equal to the single-device composition."""
+    data mesh, bitwise-equal to the single-device composition.
+    ``fault`` threads into both sharded stages' per-shard sites."""
     mesh = _default_mesh(mesh)
     p = calibrate_p_sharded(knn_sqdist, perplexity, iters=iters, mesh=mesh,
-                            axis=axis)
-    return symmetrize_sharded(knn_idx, p, mesh=mesh, axis=axis)
+                            axis=axis, fault=fault)
+    return symmetrize_sharded(knn_idx, p, mesh=mesh, axis=axis, fault=fault)

@@ -410,6 +410,48 @@ def build_negative_sampler(knn_idx, weights, *, power: float = 0.75,
     return NodeSampler(jnp.asarray(thr), jnp.asarray(alias), N)
 
 
+def alias_marginals(threshold, alias) -> np.ndarray:
+    """The exact per-index draw probability an alias table encodes.
+
+    ``P(i) = (threshold_i + sum_j 1[alias_j = i] (1 - threshold_j)) / n``
+    — the uniform slot draw keeps index ``i`` with its own threshold and
+    collects every other slot's aliased remainder.  f64 host arithmetic:
+    this is the oracle the sampler tests compare table constructions
+    with, not a hot path."""
+    thr = np.asarray(threshold, np.float64)
+    ali = np.asarray(alias, np.int64)
+    m = thr.copy()
+    np.add.at(m, ali, 1.0 - thr)
+    return m / thr.shape[0]
+
+
+def edge_marginals(sampler) -> np.ndarray:
+    """Global per-directed-edge draw probabilities, row-major ``(E,)``.
+
+    Works for both :class:`EdgeSampler` and :class:`ShardedEdgeSampler`
+    — for the sharded two-level draw the shard-selection marginal
+    multiplies each shard's local table marginal, and the contiguous
+    row layout makes shard-order concatenation global row-major order
+    (padding rows sit at the end and are sliced off).  Samplers built
+    from the same (knn_idx, weights) on ANY mesh agree up to table-
+    construction rounding (exactly ``w_e / W`` in exact arithmetic) —
+    the elastic-resume tests assert this across shard counts, and
+    bitwise equality for same-mesh rebuilds."""
+    if isinstance(sampler, ShardedEdgeSampler):
+        P = sampler.n_shards
+        if P == 1:
+            return alias_marginals(sampler.threshold[0],
+                                   sampler.alias[0])[:sampler.n_edges]
+        shard_p = alias_marginals(sampler.shard_threshold,
+                                  sampler.shard_alias)
+        per = [shard_p[s] * alias_marginals(sampler.threshold[s],
+                                            sampler.alias[s])
+               for s in range(P)]
+        return np.concatenate(per)[:sampler.n_edges]
+    return alias_marginals(sampler.threshold,
+                           sampler.alias)[:sampler.n_edges]
+
+
 # ---------------------------------------------------------------------------
 # Sharded build (1-D "data" mesh — same row layout as the KNN ring)
 # ---------------------------------------------------------------------------

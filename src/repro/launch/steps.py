@@ -278,6 +278,12 @@ def make_largevis_step_sharded(mesh, *, n_nodes: int, n_edges: int,
     if n_edges % n_shards:
         raise ValueError(f"n_edges={n_edges} not a multiple of the DP "
                          f"size {n_shards} (pad rows first)")
+    if n_nodes < n_shards:
+        # same constraint the elastic checkpoint restore enforces via its
+        # topology tag (checkpoint/largevis_state.py): fewer rows than
+        # shards cannot fill the contiguous-block layout
+        raise ValueError(f"n_nodes={n_nodes} < DP size {n_shards}: rows "
+                         f"cannot cover the mesh one block per device")
     e_loc = n_edges // n_shards
     n_loc = -(-n_nodes // n_shards)
     b_loc = max(1, batch // n_shards)

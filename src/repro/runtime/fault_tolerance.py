@@ -6,7 +6,11 @@ What executes here (and is tested):
     kill runs mid-stream and verify the restarted trajectory matches an
     uninterrupted one exactly);
   * elastic re-scale — host-gathered checkpoints restore onto a different
-    device count / mesh shape (re-shard on load);
+    device count / mesh shape (re-shard on load); the LargeVis stage
+    checkpoints are topology-portable (fingerprint excludes the mesh
+    shape, a topology tag rides in the metadata) and a shard lost
+    mid-run (:class:`ShardFailedError` from a per-shard fault site)
+    degrades the job onto a smaller mesh instead of killing it;
   * straggler mitigation — a step-time watchdog flags outlier steps; the
     LargeVis layout runs under local-SGD (sync_every=H) so a slow worker
     delays the psum only every H steps; LM training uses bounded-staleness
@@ -56,9 +60,9 @@ class Watchdog:
 
 class DegradedModeWarning(UserWarning):
     """A pipeline stage demoted its implementation after a backend failure
-    (``fused -> ref/split`` kernels, ``device -> host`` sampler builds).
-    Emitted exactly once per demotion with the stage, the route taken,
-    and the original error."""
+    (``fused -> ref/split`` kernels, ``device -> host`` sampler builds,
+    ``mesh[P] -> mesh[P/2]`` after a shard failure).  Emitted exactly once
+    per demotion with the stage, the route taken, and the original error."""
 
     def __init__(self, stage: str, from_impl: str, to_impl: str, cause):
         self.stage, self.from_impl, self.to_impl = stage, from_impl, to_impl
@@ -66,6 +70,43 @@ class DegradedModeWarning(UserWarning):
         super().__init__(
             f"degraded mode: {stage} demoted {from_impl!r} -> {to_impl!r} "
             f"after {type(cause).__name__}: {cause}")
+
+
+class TopologyChangeWarning(UserWarning):
+    """A stage checkpoint written on a different mesh resumed here.
+
+    Graph-prep stages restore bitwise across any shard count (global
+    arrays re-sharded on load), so they resume silently; the local-SGD
+    layout's *trajectory* is P-dependent by construction (per-replica
+    key streams), so a cross-topology layout resume continues from the
+    last committed round boundary — same embedding state, new key
+    schedule — and announces itself exactly once with this warning."""
+
+    def __init__(self, stage: str, saved_shards: int, new_shards: int,
+                 resumed_at: int):
+        self.stage, self.resumed_at = stage, resumed_at
+        self.saved_shards, self.new_shards = saved_shards, new_shards
+        super().__init__(
+            f"{stage} checkpoint written on a {saved_shards}-shard mesh "
+            f"resumed on {new_shards} shard(s): continuing from the last "
+            f"committed boundary (round {resumed_at}); the trajectory "
+            f"from here follows the new mesh's key schedule")
+
+
+class ShardFailedError(RuntimeError):
+    """A single shard of a sharded pipeline stage failed mid-run.
+
+    Raised by the per-shard fault sites (:func:`fire_per_shard`) —
+    and, on a real deployment, by the multi-controller runtime when a
+    device drops out.  ``core/largevis.py`` catches it, emits one
+    :class:`DegradedModeWarning`, rebuilds a smaller mesh, and re-enters
+    from the last committed stage via the re-shard restore path."""
+
+    def __init__(self, stage: str, shard: int, cause=None):
+        self.stage, self.shard, self.cause = stage, shard, cause
+        super().__init__(
+            f"shard {shard} failed in stage {stage!r}"
+            + (f" ({type(cause).__name__}: {cause})" if cause else ""))
 
 
 class DivergenceWarning(UserWarning):
@@ -98,11 +139,46 @@ class InjectedFault(RuntimeError):
         super().__init__(f"injected fault at site {site!r} (hit #{hit})")
 
 
+# Every site the pipeline and the projection server actually fire.  A
+# FaultInjector plan naming anything else raises ValueError at plan
+# (construction) time — a typo'd site would otherwise silently never
+# fire and let a chaos test pass vacuously.  Exported so tests can
+# enumerate coverage against it.
+FAULT_SITES = frozenset({
+    # largevis() pipeline stage boundaries (core/largevis.py)
+    "stage:graph", "stage:weights", "stage:samplers",
+    # layout drivers (core/layout.py)
+    "layout_chunk", "layout_saved", "layout_round",
+    # projection server (launch/serve_projection.py)
+    "submit", "prefill", "retire", "step",
+})
+
+# Per-shard sites inside the sharded stages: the plan names them
+# ``"<site>:<shard_index>"`` (e.g. ``"knn_ring_step:2"``) and they fire
+# once per shard per pass through the stage via :func:`fire_per_shard`.
+SHARDED_FAULT_SITES = frozenset({
+    "knn_ring_step",        # core/knn_sharded.py ring dispatch
+    "calibrate_shard",      # core/perplexity.py calibrate_p_sharded
+    "symmetrize_exchange",  # core/perplexity.py symmetrize_sharded
+    "local_sgd_round",      # core/layout.py run_layout_local_sgd
+})
+
+
+def _valid_site(site: str) -> bool:
+    if site in FAULT_SITES:
+        return True
+    base, _, shard = site.rpartition(":")
+    return base in SHARDED_FAULT_SITES and shard.isdigit()
+
+
 class FaultInjector:
     """Deterministic fault injection at named sites.
 
     ``plan`` maps a site name to ``{hit_index: spec}`` — the spec fires on
-    the ``hit_index``-th time (0-based) that site is reached.  Specs:
+    the ``hit_index``-th time (0-based) that site is reached.  Site names
+    are validated against :data:`FAULT_SITES` /
+    :data:`SHARDED_FAULT_SITES` at construction (``ValueError`` on an
+    unknown name).  Specs:
 
     * ``"nan"``       — corrupt the site's payload: every float array in
       it is filled with NaN (the payload is returned corrupted);
@@ -119,6 +195,12 @@ class FaultInjector:
 
     def __init__(self, plan: Optional[dict] = None):
         self.plan = dict(plan or {})
+        unknown = sorted(s for s in self.plan if not _valid_site(s))
+        if unknown:
+            raise ValueError(
+                f"unknown fault site(s) {unknown}: registered sites are "
+                f"{sorted(FAULT_SITES)} plus per-shard "
+                f"{sorted(SHARDED_FAULT_SITES)} as '<site>:<shard>'")
         self.counts: dict = {}
         self.log: list = []
 
@@ -141,6 +223,32 @@ class FaultInjector:
         raise ValueError(f"unknown fault spec {spec!r} at site {site!r}")
 
 
+def fire_per_shard(fault, site: str, n_shards: int, *, stage: str,
+                   payloads=None):
+    """Fire a per-shard site once per shard; shard faults become
+    :class:`ShardFailedError`.
+
+    The host driver fires ``"<site>:<s>"`` for every shard ``s`` around
+    the stage's single SPMD dispatch (a single-controller mesh has no
+    per-shard host code to instrument — naming the shard in the site is
+    what parameterizes the failure).  An injected exception is wrapped
+    as ``ShardFailedError(stage, s)`` so the mesh-recovery loop in
+    ``core/largevis.py`` can distinguish a lost shard from any other
+    failure; ``"kill"`` specs still SIGKILL, and callable specs may
+    transform the optional per-shard ``payloads`` (e.g. inflate one
+    shard's observed round time to simulate a straggler).  Returns the
+    (possibly transformed) payload list."""
+    if fault is None:
+        return payloads
+    out = list(payloads) if payloads is not None else [None] * n_shards
+    for s in range(n_shards):
+        try:
+            out[s] = fault.fire(f"{site}:{s}", out[s])
+        except InjectedFault as e:
+            raise ShardFailedError(stage, s, e) from e
+    return out
+
+
 def _poison(payload):
     """Fill every inexact (float) array leaf of the payload with NaN."""
     import jax
@@ -160,19 +268,52 @@ def _poison(payload):
 
 
 class PreemptionGuard:
-    """SIGTERM/SIGINT -> checkpoint-now-then-exit hook (cluster preemption)."""
+    """SIGTERM/SIGINT -> checkpoint-now-then-exit hook (cluster preemption).
 
-    def __init__(self, save_fn: Callable[[], None]):
+    ``largevis()`` installs one (SIGTERM + SIGINT) whenever checkpointing
+    is enabled and registers it as the process-wide *active* guard; the
+    layout drivers look the active guard up and keep its ``save_fn``
+    pointed at a synchronous save of the newest stage boundary
+    (:meth:`set_save_fn` — late binding, since the state worth saving
+    changes every chunk).  On a signal the guard runs the save, restores
+    the previous handlers, and — with ``exit_after_save`` — re-raises
+    the signal so the process still dies by it (exit code 128+signum,
+    what a preempting scheduler expects).  ``restore_handlers`` on
+    normal completion puts the prior handlers back untouched."""
+
+    _active: Optional["PreemptionGuard"] = None
+
+    def __init__(self, save_fn: Optional[Callable[[], None]] = None, *,
+                 signals=(signal.SIGTERM,), exit_after_save: bool = False):
         self._save_fn = save_fn
+        self._exit = exit_after_save
         self.triggered = False
         self._prev = {}
-        for sig in (signal.SIGTERM,):
+        for sig in signals:
             self._prev[sig] = signal.signal(sig, self._handle)
+
+    @classmethod
+    def active(cls) -> Optional["PreemptionGuard"]:
+        return cls._active
+
+    def activate(self):
+        """Make this the guard ``active()`` returns (one per process)."""
+        PreemptionGuard._active = self
+        return self
+
+    def set_save_fn(self, fn: Optional[Callable[[], None]]):
+        self._save_fn = fn
 
     def _handle(self, signum, frame):
         self.triggered = True
-        self._save_fn()
+        if self._save_fn is not None:
+            self._save_fn()
+        if self._exit:
+            self.restore_handlers()
+            os.kill(os.getpid(), signum)
 
     def restore_handlers(self):
         for sig, prev in self._prev.items():
             signal.signal(sig, prev)
+        if PreemptionGuard._active is self:
+            PreemptionGuard._active = None

@@ -145,6 +145,25 @@ def pad_rows(x, n_shards: int, fill=0):
     return jnp.pad(x, widths, constant_values=fill)
 
 
+def shard_rows(x, mesh, axis: str = "data"):
+    """Place a GLOBAL row array onto the mesh: dim 0 split over ``axis``
+    into the contiguous blocks of ``rows_per_shard`` rows when the row
+    count divides the shard count, replicated otherwise (the shape is
+    never changed — downstream stages read ``shape[0]`` as N, then
+    ``pad_rows`` for their own shard_map dispatch exactly as they do
+    for fresh global inputs).
+
+    The elastic-restore primitive: stage checkpoints store global
+    (host-gathered, unsharded) arrays, and this is how
+    ``StageCheckpointer.restore`` re-shards them onto whatever mesh the
+    *resuming* process happens to have — any shard count, not just the
+    one that wrote the checkpoint."""
+    import jax.numpy as jnp
+    x = jnp.asarray(x)
+    spec = _guard(mesh, x.shape, [axis] + [None] * (x.ndim - 1))
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
 def fsdp_axis(mesh: Mesh, train: bool):
     return "data" if train else None
 

@@ -1,0 +1,485 @@
+"""Elastic sharded pipeline (PR 10): topology-portable checkpoints,
+mesh-level fault injection, and shard-failure recovery.
+
+Contract under test (README "Robustness", elastic resume):
+
+* stage checkpoints store GLOBAL arrays + a topology tag; the run
+  fingerprint excludes the mesh shape, so a checkpoint written on P
+  shards restores onto any P' (``StageCheckpointer.restore`` re-shards);
+* graph-prep stages are bitwise P-invariant, so a P=4 run SIGKILLed at a
+  stage boundary and resumed on 2 or 1 shards produces the **bitwise**
+  KNN graph / weights — and sampler marginals — of an uninterrupted
+  single-shard run;
+* a layout checkpoint resumed on a different shard count continues from
+  the last committed round boundary with exactly one
+  ``TopologyChangeWarning`` (local-SGD trajectories are P-dependent);
+* an injected per-shard fault (``ShardFailedError``) degrades the mesh
+  ``P -> P/2`` with exactly one ``DegradedModeWarning`` and the fit
+  completes; at P=1 the failure propagates;
+* SIGTERM/SIGINT with checkpointing on commits a resumable layout save
+  before the process exits by the signal (``PreemptionGuard``).
+
+Tier-1 tests here are single-device-safe; the ``chaos``-marked tests
+need a forced multi-device host (the CI mesh-chaos job runs them under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``) or spawn
+subprocesses that force it themselves.
+"""
+import dataclasses
+import json
+import os
+import signal
+import subprocess
+import sys
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer as ck
+from repro.checkpoint.largevis_state import (StageCheckpointer,
+                                             run_fingerprint, topology_tag)
+from repro.configs.largevis_default import CheckpointConfig, LargeVisConfig
+from repro.runtime.fault_tolerance import (FAULT_SITES, SHARDED_FAULT_SITES,
+                                           DegradedModeWarning,
+                                           FaultInjector, PreemptionGuard,
+                                           ShardFailedError,
+                                           TopologyChangeWarning,
+                                           fire_per_shard)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4")
+
+
+def _x(n=384, d=16, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _cfg(shards, ckdir=None, **kw):
+    base = dict(n_neighbors=8, n_trees=2, n_explore_iters=1, window=16,
+                perplexity=6.0, samples_per_node=120, batch_size=64,
+                distributed=True, data_shards=shards, sync_every=8)
+    base.update(kw)
+    cfg = LargeVisConfig(**base)
+    if ckdir is not None:
+        cfg = dataclasses.replace(cfg, checkpoint=CheckpointConfig(
+            directory=str(ckdir), every_chunks=1))
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# fault-plan validation + site registry (tier-1)
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_rejects_unknown_site():
+    with pytest.raises(ValueError, match="unknown fault site.*bogus"):
+        FaultInjector({"bogus": {0: "exception"}})
+
+
+def test_fault_plan_rejects_malformed_shard_site():
+    # a sharded base name needs a ':<digit>' shard suffix
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultInjector({"knn_ring_step": {0: "exception"}})
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultInjector({"calibrate_shard:x": {0: "exception"}})
+
+
+def test_fault_plan_accepts_registered_sites():
+    plan = {s: {0: "exception"} for s in FAULT_SITES}
+    plan.update({f"{s}:3": {0: "exception"} for s in SHARDED_FAULT_SITES})
+    FaultInjector(plan)            # must not raise
+
+
+def test_registry_covers_pipeline_sites():
+    """Every site the source actually fires is registered — a renamed
+    site would otherwise make existing chaos plans silently inert."""
+    for s in ("stage:graph", "stage:weights", "stage:samplers",
+              "layout_chunk", "layout_saved", "layout_round"):
+        assert s in FAULT_SITES
+    for s in ("knn_ring_step", "calibrate_shard", "symmetrize_exchange",
+              "local_sgd_round"):
+        assert s in SHARDED_FAULT_SITES
+
+
+def test_fire_per_shard_wraps_shard_fault():
+    fault = FaultInjector({"calibrate_shard:2": {0: "exception"}})
+    with pytest.raises(ShardFailedError) as exc:
+        fire_per_shard(fault, "calibrate_shard", 4, stage="calibrate")
+    assert exc.value.shard == 2 and exc.value.stage == "calibrate"
+
+
+def test_fire_per_shard_callable_transforms_payload():
+    fault = FaultInjector({"local_sgd_round:1": {0: lambda dt: dt * 10}})
+    out = fire_per_shard(fault, "local_sgd_round", 3, stage="layout",
+                         payloads=[1.0, 1.0, 1.0])
+    assert out == [1.0, 10.0, 1.0]
+
+
+# ---------------------------------------------------------------------------
+# topology-invariant fingerprints + topology tags (tier-1)
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_excludes_topology():
+    x, key = _x(64, 4), jax.random.key(3)
+    fps = {run_fingerprint(x, key, LargeVisConfig(
+        distributed=d, data_shards=p)) for d, p in
+        [(False, 0), (True, 1), (True, 4), (True, 8)]}
+    assert len(fps) == 1, "mesh shape leaked into the run fingerprint"
+
+
+def test_fingerprint_still_binds_algorithm_and_data():
+    x, key = _x(64, 4), jax.random.key(3)
+    fp = run_fingerprint(x, key, LargeVisConfig())
+    assert fp != run_fingerprint(x, key, LargeVisConfig(perplexity=9.0))
+    assert fp != run_fingerprint(x, jax.random.key(4), LargeVisConfig())
+    assert fp != run_fingerprint(_x(64, 4, seed=1), key, LargeVisConfig())
+
+
+def test_topology_tag_resolves_shards():
+    tag = topology_tag(LargeVisConfig(), 100)
+    assert tag == {"distributed": False, "data_shards": 1, "n_rows": 100}
+    tag = topology_tag(LargeVisConfig(distributed=True, data_shards=1), 7)
+    assert tag["data_shards"] == 1 and tag["n_rows"] == 7
+
+
+# ---------------------------------------------------------------------------
+# fallback walk skips topology-incompatible checkpoints (tier-1)
+# ---------------------------------------------------------------------------
+
+def _stage_dir_with_tags(tmp_path, tags):
+    """One stage dir with a checkpoint per (step, topology-tag)."""
+    d = tmp_path / "stage"
+    for step, tag in tags:
+        ck.save(d, step, {"y": np.arange(8.0, dtype=np.float32)},
+                keep=len(tags),
+                extra_meta={"topology": tag} if tag is not None else None)
+    return d
+
+
+def test_walk_skips_degenerate_topology_checkpoint(tmp_path):
+    """A newest checkpoint whose tag names more shards than rows (a
+    mesh-shrink artifact at tiny N) is skipped like corruption and the
+    older compatible one wins."""
+    from repro.checkpoint.largevis_state import _topology_compatible
+    d = _stage_dir_with_tags(tmp_path, [
+        (1, {"distributed": True, "data_shards": 2, "n_rows": 8}),
+        (2, {"distributed": True, "data_shards": 16, "n_rows": 8}),
+    ])
+    with pytest.warns(RuntimeWarning, match="incompatible checkpoint"):
+        tree, step = ck.restore(d, validate=_topology_compatible)
+    assert step == 1
+
+    # explicit step: no fallback, hard error
+    with pytest.raises(ck.CheckpointIncompatibleError):
+        ck.restore(d, step=2, validate=_topology_compatible)
+
+
+def test_walk_accepts_pre_elastic_checkpoints(tmp_path):
+    """Checkpoints without a topology tag (pre-PR-10) restore silently."""
+    from repro.checkpoint.largevis_state import _topology_compatible
+    d = _stage_dir_with_tags(tmp_path, [(1, None)])
+    tree, step = ck.restore(d, validate=_topology_compatible)
+    assert step == 1
+
+
+def test_stage_restore_passthrough_without_mesh(tmp_path):
+    """restore(mesh=None) behaves exactly like load."""
+    sc = StageCheckpointer(CheckpointConfig(directory=str(tmp_path)), "fp")
+    sc.save("graph", {"idx": np.arange(12).reshape(6, 2)},
+            extra={"topology": {"distributed": True, "data_shards": 3,
+                                "n_rows": 6}})
+    tree, step, extra = sc.restore("graph", mesh=None)
+    assert np.array_equal(np.asarray(tree["idx"]),
+                          np.arange(12).reshape(6, 2))
+    assert extra["topology"]["data_shards"] == 3
+
+
+# ---------------------------------------------------------------------------
+# re-shard placement + in-process elastic resume (chaos: forced 4-dev mesh)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+@multi_device
+def test_stage_restore_reshards_onto_mesh(tmp_path):
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_data_mesh
+    mesh = make_data_mesh(4)
+    sc = StageCheckpointer(CheckpointConfig(directory=str(tmp_path)), "fp")
+    rows = np.arange(32.0, dtype=np.float32).reshape(8, 4)
+    sc.save("graph", {"w": rows, "scalar": np.float32(2.0)},
+            extra={"topology": {"distributed": True, "data_shards": 2,
+                                "n_rows": 8}})
+    tree, step, extra = sc.restore("graph", mesh=mesh)
+    w = tree["w"]
+    assert np.array_equal(np.asarray(w), rows)          # values untouched
+    assert w.sharding.spec == P("data", None)           # rows placed on mesh
+    shard_rows = {s.data.shape[0] for s in w.addressable_shards}
+    assert shard_rows == {2}                            # 8 rows over 4 shards
+
+
+@pytest.mark.chaos
+@multi_device
+def test_elastic_resume_p4_to_smaller_mesh(tmp_path):
+    """Full P=4 checkpointed run restored on P in {2, 1}: graph prep is
+    bitwise, sampler marginals match the target-mesh rebuild bitwise
+    (cross-mesh to ~f32 table rounding), the completed layout reloads
+    as-is, and the topology change announces itself exactly once."""
+    from repro.core.largevis import largevis
+    from repro.core.sampler import build_samplers_sharded, edge_marginals
+    from repro.launch.mesh import make_data_mesh
+    x, key = _x(), jax.random.key(7)
+    r4 = largevis(x, key, cfg=_cfg(4, tmp_path / "ck"))
+    base = largevis(x, key, cfg=_cfg(1, tmp_path / "base"))
+    m_base = edge_marginals(build_samplers_sharded(
+        np.asarray(base.knn_idx), np.asarray(base.weights),
+        mesh=make_data_mesh(1))[0])
+    for new_p in (2, 1):
+        with warnings.catch_warnings(record=True) as wlist:
+            warnings.simplefilter("always")
+            r = largevis(x, key, cfg=_cfg(new_p, tmp_path / "ck"))
+        topo = [w for w in wlist
+                if isinstance(w.message, TopologyChangeWarning)]
+        assert len(topo) == 1, [str(w.message) for w in wlist]
+        assert topo[0].message.saved_shards == 4
+        assert topo[0].message.new_shards == new_p
+        assert np.array_equal(np.asarray(r.knn_idx), np.asarray(base.knn_idx))
+        assert np.array_equal(np.asarray(r.weights), np.asarray(base.weights))
+        # layout was complete at the kill... i.e. at save: reload verbatim
+        assert np.array_equal(np.asarray(r.y), np.asarray(r4.y))
+        m = edge_marginals(build_samplers_sharded(
+            np.asarray(r.knn_idx), np.asarray(r.weights),
+            mesh=make_data_mesh(new_p))[0])
+        if new_p == 1:
+            assert np.array_equal(m, m_base)            # same-mesh: bitwise
+        else:
+            np.testing.assert_allclose(m, m_base, rtol=1e-6)
+
+
+@pytest.mark.chaos
+@multi_device
+def test_shard_fault_degrades_mesh_and_completes(tmp_path):
+    """One injected shard fault -> exactly one DegradedModeWarning, the
+    fit completes on the halved mesh."""
+    from repro.core.largevis import largevis
+    for site, stage in [("knn_ring_step:1", "knn"),
+                        ("calibrate_shard:2", "calibrate"),
+                        ("symmetrize_exchange:0", "symmetrize"),
+                        ("local_sgd_round:3", "layout")]:
+        fault = FaultInjector({site: {0: "exception"}})
+        with warnings.catch_warnings(record=True) as wlist:
+            warnings.simplefilter("always")
+            r = largevis(_x(), jax.random.key(7), cfg=_cfg(4), fault=fault)
+        deg = [w for w in wlist
+               if isinstance(w.message, DegradedModeWarning)]
+        assert len(deg) == 1, (site, [str(w.message) for w in wlist])
+        assert deg[0].message.stage == stage
+        assert deg[0].message.from_impl == "mesh[4]"
+        assert deg[0].message.to_impl == "mesh[2]"
+        assert r.cfg.data_shards == 2
+        assert np.all(np.isfinite(np.asarray(r.y)))
+
+
+@pytest.mark.chaos
+@multi_device
+def test_shard_fault_at_one_shard_propagates():
+    """With nothing left to shed the failure is real: re-raised."""
+    from repro.core.largevis import largevis
+    fault = FaultInjector({"calibrate_shard:0":
+                           {h: "exception" for h in range(3)}})
+    with pytest.raises(ShardFailedError), warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        largevis(_x(), jax.random.key(7), cfg=_cfg(4), fault=fault)
+
+
+@pytest.mark.chaos
+@multi_device
+def test_straggling_shard_flagged_by_index():
+    """A callable per-shard fault inflates one shard's observed round
+    time; the per-shard watchdogs name that shard in the warning and in
+    ``result.stragglers``."""
+    from repro.core.largevis import build_graph, layout_graph
+    cfg = _cfg(4, samples_per_node=400, batch_size=16)
+    idx, dist, w, _ = build_graph(_x(256, 8), jax.random.key(5), cfg=cfg)
+    slow = {h: (lambda dt: dt * 50 + 1.0) for h in range(12, 16)}
+    fault = FaultInjector({"local_sgd_round:1": slow})
+    with pytest.warns(RuntimeWarning, match="shard 1 straggling"):
+        res, _ = layout_graph(idx, w, jax.random.key(6), cfg=cfg,
+                              fault=fault)
+    assert res.stragglers and all(s[0] == 1 for s in res.stragglers)
+
+
+# ---------------------------------------------------------------------------
+# subprocess matrix: SIGKILL on P=4, resume on P' in {2, 1} (slow/chaos)
+# ---------------------------------------------------------------------------
+
+_WORKER = r"""
+import os, sys, warnings
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+sys.path.insert(0, SRC)
+import dataclasses, json
+import numpy as np, jax
+from repro.configs.largevis_default import LargeVisConfig, CheckpointConfig
+from repro.core.largevis import largevis
+from repro.core.sampler import build_samplers_sharded, edge_marginals
+from repro.launch.mesh import make_data_mesh
+from repro.runtime.fault_tolerance import (FaultInjector,
+                                           TopologyChangeWarning)
+
+shards = int(os.environ["ELASTIC_SHARDS"])
+cfg = LargeVisConfig(n_neighbors=8, n_trees=2, n_explore_iters=1, window=16,
+                     perplexity=6.0, samples_per_node=120, batch_size=64,
+                     distributed=True, data_shards=shards, sync_every=8,
+                     checkpoint=CheckpointConfig(
+                         directory=os.environ["ELASTIC_CKPT"],
+                         every_chunks=1))
+x = np.random.default_rng(0).normal(size=(384, 16)).astype(np.float32)
+site = os.environ.get("ELASTIC_SITE")
+fault = None
+if site == "sigterm":
+    # self-preempt two committed rounds into the layout: the guard must
+    # save synchronously, then the process dies BY the signal
+    cfg = dataclasses.replace(cfg, checkpoint=dataclasses.replace(
+        cfg.checkpoint, every_chunks=1000))      # guard save, not cadence
+    import signal
+    fault = FaultInjector({"layout_round": {
+        2: (lambda y: os.kill(os.getpid(), signal.SIGTERM) or y)}})
+elif site:
+    fault = FaultInjector({site: {int(os.environ["ELASTIC_HIT"]): "kill"}})
+with warnings.catch_warnings(record=True) as wlist:
+    warnings.simplefilter("always")
+    res = largevis(x, jax.random.key(7), cfg=cfg, fault=fault)
+es, _ = build_samplers_sharded(np.asarray(res.knn_idx),
+                               np.asarray(res.weights),
+                               mesh=make_data_mesh(res.cfg.data_shards))
+np.savez(os.environ["ELASTIC_OUT"], y=np.asarray(res.y),
+         idx=np.asarray(res.knn_idx), dist=np.asarray(res.knn_dist),
+         w=np.asarray(res.weights), marginals=edge_marginals(es))
+meta = {"topo_warns": sum(isinstance(w.message, TopologyChangeWarning)
+                          for w in wlist)}
+with open(os.environ["ELASTIC_OUT"] + ".json", "w") as f:
+    json.dump(meta, f)
+print("WORKER_DONE")
+"""
+
+
+def _run_worker(tmp_path, out_name, *, shards, site=None, hit=0):
+    env = dict(os.environ,
+               ELASTIC_OUT=str(tmp_path / out_name),
+               ELASTIC_SITE=site or "", ELASTIC_HIT=str(hit),
+               ELASTIC_CKPT=str(tmp_path / "ckpt"),
+               ELASTIC_SHARDS=str(shards))
+    env.pop("XLA_FLAGS", None)
+    script = _WORKER.replace("SRC", repr(os.path.join(REPO, "src")))
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600)
+
+
+def _load(tmp_path, name):
+    data = np.load(str(tmp_path / name) + ".npz")
+    with open(str(tmp_path / name) + ".json") as f:
+        meta = json.load(f)
+    return data, meta
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+@pytest.mark.parametrize("resume_shards", [2, 1])
+@pytest.mark.parametrize("site,hit", [
+    ("stage:graph", 0), ("stage:weights", 0),
+])
+def test_sigkill_stage_boundary_resume_smaller_mesh(tmp_path, site, hit,
+                                                    resume_shards):
+    """P=4 SIGKILLed at a graph-prep boundary, resumed on fewer shards:
+    graph/weights restore bitwise from the P=4 checkpoint, the layout
+    runs entirely on the new mesh, so the final embedding is bitwise
+    that of an uninterrupted run at the resume topology."""
+    killed = _run_worker(tmp_path, "na", shards=4, site=site, hit=hit)
+    assert killed.returncode == -9, (killed.returncode,
+                                     killed.stderr[-2000:])
+    resumed = _run_worker(tmp_path, "resumed", shards=resume_shards)
+    assert resumed.returncode == 0, resumed.stderr[-2000:]
+    clean_dir = tmp_path / "clean"
+    clean_dir.mkdir()
+    clean = _run_worker(clean_dir, "clean", shards=resume_shards)
+    assert clean.returncode == 0, clean.stderr[-2000:]
+    res, res_meta = _load(tmp_path, "resumed")
+    ref, _ = _load(clean_dir, "clean")
+    for k in ("idx", "dist", "w", "y", "marginals"):
+        assert np.array_equal(res[k], ref[k]), k
+    # no layout checkpoint existed at the kill -> no topology warning
+    assert res_meta["topo_warns"] == 0
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+@pytest.mark.parametrize("resume_shards", [2, 1])
+def test_sigkill_mid_layout_resume_smaller_mesh(tmp_path, resume_shards):
+    """P=4 SIGKILLed mid-layout, resumed on fewer shards: graph prep is
+    still bitwise vs an uninterrupted single-shard run, and the layout
+    continues from the last committed round with exactly one
+    TopologyChangeWarning."""
+    killed = _run_worker(tmp_path, "na", shards=4, site="layout_saved",
+                         hit=1)
+    assert killed.returncode == -9, (killed.returncode,
+                                     killed.stderr[-2000:])
+    resumed = _run_worker(tmp_path, "resumed", shards=resume_shards)
+    assert resumed.returncode == 0, resumed.stderr[-2000:]
+    clean_dir = tmp_path / "clean"
+    clean_dir.mkdir()
+    clean = _run_worker(clean_dir, "clean", shards=1)
+    assert clean.returncode == 0, clean.stderr[-2000:]
+    res, res_meta = _load(tmp_path, "resumed")
+    ref, _ = _load(clean_dir, "clean")
+    for k in ("idx", "dist", "w"):
+        assert np.array_equal(res[k], ref[k]), k
+    np.testing.assert_allclose(res["marginals"], ref["marginals"],
+                               rtol=1e-6)
+    assert res_meta["topo_warns"] == 1
+    assert np.all(np.isfinite(res["y"]))
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_sigterm_preemption_guard_saves_before_exit(tmp_path):
+    """SIGTERM mid-layout with a checkpoint cadence that would never
+    fire: the PreemptionGuard's synchronous save is the only way a
+    layout checkpoint can exist — and the resumed run must finish from
+    it, bitwise-equal to an uninterrupted run at the same topology."""
+    killed = _run_worker(tmp_path, "na", shards=4, site="sigterm")
+    assert killed.returncode == -signal.SIGTERM, (killed.returncode,
+                                                  killed.stderr[-2000:])
+    layout_dir = tmp_path / "ckpt" / "layout"
+    committed = [p for p in layout_dir.glob("step_*")
+                 if (p / "_COMMITTED").exists()]
+    assert committed, "preemption guard did not commit a layout save"
+    resumed = _run_worker(tmp_path, "resumed", shards=4)
+    assert resumed.returncode == 0, resumed.stderr[-2000:]
+    clean_dir = tmp_path / "clean"
+    clean_dir.mkdir()
+    clean = _run_worker(clean_dir, "clean", shards=4)
+    assert clean.returncode == 0, clean.stderr[-2000:]
+    res, res_meta = _load(tmp_path, "resumed")
+    ref, _ = _load(clean_dir, "clean")
+    assert np.array_equal(res["y"], ref["y"])
+    assert res_meta["topo_warns"] == 0          # same topology: silent
+
+
+# ---------------------------------------------------------------------------
+# PreemptionGuard unit behavior (tier-1)
+# ---------------------------------------------------------------------------
+
+def test_preemption_guard_active_registry_and_restore():
+    assert PreemptionGuard.active() is None
+    guard = PreemptionGuard(signals=(signal.SIGUSR1,)).activate()
+    try:
+        assert PreemptionGuard.active() is guard
+        saves = []
+        guard.set_save_fn(lambda: saves.append(1))
+        os.kill(os.getpid(), signal.SIGUSR1)
+        assert saves == [1] and guard.triggered
+    finally:
+        guard.restore_handlers()
+    assert PreemptionGuard.active() is None
